@@ -1,0 +1,96 @@
+"""Shared harness: engine constructors + workload generators.
+
+Scaled-down reproduction of the paper's methodology (§6.1): fill phase with
+random 32-byte keys and fixed-size values, then a timed measurement phase.
+Absolute ops/s on 1 CPU core are not comparable to the paper's 48-thread
+NVMe box; the *ratios* between engines and the *shapes* of the curves are
+the reproduction targets (DESIGN §9).
+"""
+from __future__ import annotations
+
+import hashlib
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.lsm_baseline import LsmBaseline, LsmConfig
+from repro.core.tidestore import DbConfig, KeyspaceConfig, TideDB
+from repro.core.tidestore.wal import WalConfig
+
+
+def make_tide(path, relocation=False):
+    return TideDB(path, DbConfig(
+        keyspaces=[KeyspaceConfig("default", n_cells=256,
+                                  dirty_flush_threshold=2048)],
+        wal=WalConfig(segment_size=8 * 1024 * 1024),
+        index_wal=WalConfig(segment_size=32 * 1024 * 1024),
+        relocation=relocation,
+        cache_bytes=8 * 1024 * 1024,
+    ))
+
+
+def make_rocks(path):
+    """RocksDB stand-in: leveled LSM with compaction.  The memtable is kept
+    small relative to the scaled dataset so flushes + compactions actually
+    run (at the paper's 1 TB scale the memtable is likewise ≪ dataset)."""
+    return LsmBaseline(path, LsmConfig(memtable_entries=512))
+
+
+def make_blob(path):
+    """BlobDB/WiscKey stand-in: key-value separated LSM."""
+    return LsmBaseline(path, LsmConfig(memtable_entries=512,
+                                       blob_mode=True))
+
+
+ENGINES = {"tidehunter": make_tide, "rocksdb(sim)": make_rocks,
+           "blobdb(sim)": make_blob}
+
+
+def gen_keys(n: int, seed: int = 0) -> list[bytes]:
+    return [hashlib.sha256(f"{seed}:{i}".encode()).digest()
+            for i in range(n)]
+
+
+def zipf_indices(n_keys: int, n_ops: int, theta: float,
+                 seed: int = 1) -> np.ndarray:
+    """theta=0 → homogeneous uniform; theta=2 → heavily recent-skewed
+    (paper §6.1: skew favors recently inserted keys)."""
+    rng = np.random.default_rng(seed)
+    if theta == 0:
+        return rng.integers(0, n_keys, n_ops)
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    w = ranks ** -theta
+    w /= w.sum()
+    # rank 1 = most recently inserted
+    return n_keys - 1 - rng.choice(n_keys, size=n_ops, p=w)
+
+
+class Bench:
+    def __init__(self, name: str, factory):
+        self.name = name
+        self.dir = tempfile.mkdtemp(prefix=f"bench-{name.split('(')[0]}-")
+        self.db = factory(self.dir)
+
+    def fill(self, keys, value_size: int):
+        v = bytes(value_size)
+        t0 = time.perf_counter()
+        for k in keys:
+            self.db.put(k, v)
+        if hasattr(self.db, "flush"):
+            self.db.flush()
+        return time.perf_counter() - t0
+
+    def close(self):
+        self.db.close()
+        shutil.rmtree(self.dir, ignore_errors=True)
+
+
+def timed_ops(fn, ops) -> tuple[float, int]:
+    t0 = time.perf_counter()
+    n = 0
+    for op in ops:
+        fn(op)
+        n += 1
+    return time.perf_counter() - t0, n

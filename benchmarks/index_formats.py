@@ -1,0 +1,71 @@
+"""Paper §6.3 / Figure 10: optimistic vs header index, window-size sweep.
+
+Serialized index files are probed with (mostly negative) random lookups —
+the paper's worst case for the optimistic format.  Reports lookups/s, mean
+window iterations, and bytes read per lookup for each window size.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.tidestore.index import (HeaderLookup, OptimisticLookup,
+                                        serialize_header,
+                                        serialize_optimistic)
+from repro.core.tidestore.util import Metrics
+
+
+def _make_index(n_entries: int, fmt: str, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    keys = set()
+    while len(keys) < n_entries:
+        keys.update(rng.bytes(32) for _ in range(n_entries - len(keys)))
+    entries = {k: i + 1 for i, k in enumerate(keys)}
+    ser = serialize_optimistic if fmt == "optimistic" else serialize_header
+    blob, count = ser(entries, 32)
+    f = tempfile.NamedTemporaryFile(delete=False)
+    f.write(blob)
+    f.close()
+    return f.name, count
+
+
+def run(n_entries: int = 200_000, n_lookups: int = 3000, csv=print) -> None:
+    rng = np.random.default_rng(42)
+    queries = [rng.bytes(32) for _ in range(n_lookups)]
+
+    for fmt in ("optimistic", "header"):
+        path, count = _make_index(n_entries, fmt)
+        fd = os.open(path, os.O_RDONLY)
+        read_bytes = [0]
+
+        def pread(off, n):
+            data = os.pread(fd, n, off + (0 if fmt == "optimistic" else 0))
+            read_bytes[0] += len(data)
+            return data
+
+        windows = (100, 200, 400, 800, 1600, 3200) if fmt == "optimistic" \
+            else (800,)
+        for w in windows:
+            metrics = Metrics()
+            if fmt == "optimistic":
+                lk = OptimisticLookup(pread, count, 32, window_entries=w,
+                                      metrics=metrics)
+            else:
+                lk = HeaderLookup(pread, count, 32, metrics=metrics)
+            read_bytes[0] = 0
+            t0 = time.perf_counter()
+            hits = 0
+            for q in queries:
+                pos, _ = lk.lookup(q)
+                hits += pos is not None
+            dt = time.perf_counter() - t0
+            iters = metrics.index_lookup_iterations / max(
+                metrics.index_lookups, 1)
+            csv(f"index.{fmt}.w{w}.lookups_per_s,"
+                f"{dt/n_lookups*1e6:.2f},{n_lookups/dt:.0f}/s "
+                f"iters={iters:.2f} bytes/lookup={read_bytes[0]//n_lookups}")
+        os.close(fd)
+        os.unlink(path)

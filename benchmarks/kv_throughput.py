@@ -1,0 +1,58 @@
+"""Paper Figures 1/6/7/8: throughput vs value size × workload × skew.
+
+Engines: tidehunter, rocksdb(sim), blobdb(sim).  Value sizes 64/128/1024 B;
+workloads: 100% write, 50/50 mixed, 100% read (get + exists); skew θ∈{0,2}.
+Reports ops/s and the engine write-amplification counters.
+"""
+from __future__ import annotations
+
+import time
+
+from .engines import ENGINES, Bench, gen_keys, zipf_indices
+
+
+def run(n_keys: int = 6000, n_ops: int = 4000, csv=print) -> None:
+    for value_size in (64, 128, 1024):
+        keys = gen_keys(n_keys, seed=value_size)
+        for theta in (0.0, 2.0):
+            idx = zipf_indices(n_keys, n_ops, theta, seed=7)
+            for name, factory in ENGINES.items():
+                b = Bench(name, factory)
+                fill_s = b.fill(keys, value_size)
+                v = bytes(value_size)
+
+                t0 = time.perf_counter()
+                for j, i in enumerate(idx):
+                    b.db.put(keys[i], v)
+                w_s = time.perf_counter() - t0
+
+                t0 = time.perf_counter()
+                for j, i in enumerate(idx):
+                    if j % 2 == 0:
+                        b.db.get(keys[i])
+                    else:
+                        b.db.put(keys[i], v)
+                m_s = time.perf_counter() - t0
+
+                t0 = time.perf_counter()
+                for i in idx:
+                    b.db.get(keys[i])
+                g_s = time.perf_counter() - t0
+
+                t0 = time.perf_counter()
+                for i in idx:
+                    b.db.exists(keys[i])
+                e_s = time.perf_counter() - t0
+
+                stats = b.db.stats() if hasattr(b.db, "stats") else {}
+                wa = 0.0
+                if stats.get("bytes_written_app"):
+                    wa = stats["bytes_written_disk"] / stats["bytes_written_app"]
+                tag = f"kv.v{value_size}.t{int(theta)}.{name}"
+                csv(f"{tag}.write,{w_s/n_ops*1e6:.2f},"
+                    f"{n_ops/w_s:.0f} ops/s")
+                csv(f"{tag}.mixed,{m_s/n_ops*1e6:.2f},{n_ops/m_s:.0f} ops/s")
+                csv(f"{tag}.get,{g_s/n_ops*1e6:.2f},{n_ops/g_s:.0f} ops/s")
+                csv(f"{tag}.exists,{e_s/n_ops*1e6:.2f},{n_ops/e_s:.0f} ops/s")
+                csv(f"{tag}.write_amp,{wa:.2f},fill={fill_s:.1f}s")
+                b.close()

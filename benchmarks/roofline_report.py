@@ -1,0 +1,24 @@
+"""Roofline table from the dry-run artifact (experiments/dryrun.json)."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(path: str = "experiments/dryrun.json", csv=print) -> None:
+    if not os.path.exists(path):
+        csv("roofline.missing,0,run `python -m repro.launch.dryrun` first")
+        return
+    with open(path) as f:
+        rows = json.load(f)
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        tag = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
+        if r.get("status") != "ok":
+            csv(f"{tag},0,{r.get('status')}")
+            continue
+        rf = r["roofline"]
+        csv(f"{tag},{rf['t_compute']*1e6:.0f},"
+            f"t_mem={rf['t_memory']:.3f}s t_coll={rf['t_collective']:.3f}s "
+            f"bottleneck={rf['bottleneck']} "
+            f"mfu_bound={rf['roofline_fraction']*100:.1f}% "
+            f"useful_ratio={rf['model_flops_ratio']:.2f}")

@@ -1,0 +1,50 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Scaled to minutes on one
+CPU core; ratios and curve shapes (not absolute ops/s) are the paper-
+reproduction targets — see DESIGN.md §9.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: kv,reloc,index,recovery,"
+                         "validator,kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (index_formats, kernel_bench, kv_throughput, recovery,
+                   relocation, roofline_report, validator_sim)
+
+    suites = [
+        ("kv", kv_throughput.run),          # Figures 1, 6, 7, 8
+        ("reloc", relocation.run),          # Figure 9
+        ("index", index_formats.run),       # Figure 10 / §6.3
+        ("recovery", recovery.run),         # §3.3–3.4
+        ("validator", validator_sim.run),   # §6.4 (Sui stand-in)
+        ("kernels", kernel_bench.run),      # Pallas kernels
+        ("roofline", roofline_report.run),  # dry-run roofline table
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn(csv=print)
+        except Exception as e:  # pragma: no cover
+            import traceback
+            traceback.print_exc()
+            print(f"{name}.ERROR,0,{e}")
+        print(f"{name}.suite_wall_s,{(time.time()-t0)*1e6:.0f},"
+              f"{time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

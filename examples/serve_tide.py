@@ -1,0 +1,47 @@
+"""Serving example: continuous batching over the Tidehunter KV-WAL.
+
+A small model serves a queue of batched requests; finished requests expire
+their KV-WAL segments at once (epoch semantics) and the host engine
+recycles them — zero KV bytes are ever copied.
+
+Run:  PYTHONPATH=src python examples/serve_tide.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.serving.engine import ServingEngine
+
+
+def main() -> None:
+    cfg = get_config("qwen3-0.6b", smoke=True)   # reduced config for CPU
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, batch_slots=4, max_seq=128)
+
+    rng = np.random.default_rng(0)
+    reqs = [engine.submit(rng.integers(0, cfg.vocab, 1 + i % 7),
+                          max_new_tokens=8 + i % 9)
+            for i in range(12)]
+    t0 = time.time()
+    steps = 0
+    while engine.queue or engine.active:
+        engine.step()
+        steps += 1
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in reqs)
+    print(f"served {len(reqs)} requests / {toks} tokens in {steps} engine "
+          f"steps ({toks/dt:.0f} tok/s on CPU)")
+    print(f"KV-WAL segments recycled (epoch expiry, zero copies): "
+          f"{engine.segments_recycled}")
+    lat = [r.t_done - r.t_submit for r in reqs]
+    print(f"request latency p50={np.percentile(lat, 50)*1e3:.0f}ms "
+          f"p99={np.percentile(lat, 99)*1e3:.0f}ms")
+    for r in reqs[:3]:
+        print(f"  req#{r.rid}: {len(r.prompt)} prompt → {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Tidehunter storage engine — faithful host implementation (paper §3–§5)."""
+from .db import DbConfig, TideDB
+from .index import (HeaderLookup, OptimisticLookup, serialize_header,
+                    serialize_optimistic)
+from .large_table import CellState, KeyspaceConfig, LargeTable
+from .relocate import Decision, Relocator
+from .util import Metrics, PositionTracker
+from .wal import Wal, WalConfig
+
+__all__ = [
+    "TideDB", "DbConfig", "KeyspaceConfig", "CellState", "LargeTable",
+    "Wal", "WalConfig", "Relocator", "Decision", "Metrics",
+    "PositionTracker", "OptimisticLookup", "HeaderLookup",
+    "serialize_optimistic", "serialize_header",
+]

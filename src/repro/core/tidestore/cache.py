@@ -1,0 +1,48 @@
+"""Byte-budgeted LRU cache for recently read values (§3.2 step 1)."""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Optional
+
+
+class LruCache:
+    def __init__(self, capacity_bytes: int):
+        self.capacity = capacity_bytes
+        self._lock = threading.Lock()
+        self._data: OrderedDict[bytes, bytes] = OrderedDict()
+        self._size = 0
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        with self._lock:
+            v = self._data.get(key)
+            if v is not None:
+                self._data.move_to_end(key)
+            return v
+
+    def put(self, key: bytes, value: bytes) -> None:
+        if self.capacity <= 0:
+            return
+        with self._lock:
+            old = self._data.pop(key, None)
+            if old is not None:
+                self._size -= len(old) + len(key)
+            self._data[key] = value
+            self._size += len(value) + len(key)
+            while self._size > self.capacity and self._data:
+                k, v = self._data.popitem(last=False)
+                self._size -= len(v) + len(k)
+
+    def invalidate(self, key: bytes) -> None:
+        with self._lock:
+            v = self._data.pop(key, None)
+            if v is not None:
+                self._size -= len(v) + len(key)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self._size = 0
+
+    def __len__(self) -> int:
+        return len(self._data)

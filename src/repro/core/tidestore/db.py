@@ -1,0 +1,291 @@
+"""TideDB — the public engine API (paper §3).
+
+Write flow (§3.1): allocate WAL position (atomic) → write entry (parallel)
+→ update Large Table → mark position processed.  Durability against app
+crashes is immediate (the OS page cache holds the write); kernel-crash
+durability arrives asynchronously via the syncer, or synchronously via
+``flush()``.
+
+Read flow (§3.2): LRU cache → per-cell Bloom filter → Large Table (memory,
+else optimistic point-lookup into the Index Store) → Value WAL read.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+from .cache import LruCache
+from .flush import Flusher
+from .index import TOMB_FLAG, is_tombstone, real_pos
+from .large_table import CellState, KeyspaceConfig, LargeTable
+from .relocate import Relocator, RelocatorThread
+from .snapshot import (SnapshotThread, capture_state, read_control_region,
+                       write_control_region)
+from .util import Metrics
+from .wal import (HEADER_SIZE, T_ENTRY, T_INDEX, T_TOMBSTONE, Wal, WalConfig,
+                  decode_entry, decode_tombstone, encode_entry,
+                  encode_tombstone)
+
+
+@dataclass
+class DbConfig:
+    keyspaces: list = field(default_factory=lambda: [KeyspaceConfig("default")])
+    wal: WalConfig = field(default_factory=WalConfig)
+    index_wal: WalConfig = field(default_factory=lambda: WalConfig(
+        segment_size=64 * 1024 * 1024))
+    cache_bytes: int = 32 * 1024 * 1024
+    flusher_threads: int = 2
+    snapshot_interval_s: float = 0.25
+    background_snapshots: bool = True
+    relocation: bool = False               # background relocator thread
+    relocation_interval_s: float = 1.0
+    mem_budget_entries: int = 2_000_000    # Large Table residency budget
+
+
+class TideDB:
+    def __init__(self, path: str, config: Optional[DbConfig] = None):
+        self.path = path
+        self.cfg = config or DbConfig()
+        os.makedirs(path, exist_ok=True)
+        self.metrics = Metrics()
+
+        self.value_wal = Wal(path, "value", self.cfg.wal, self.metrics)
+        self.index_wal = Wal(path, "index", self.cfg.index_wal, self.metrics)
+        self.table = LargeTable(self.cfg.keyspaces, self.index_wal.pread,
+                                self.metrics)
+        self.cache = LruCache(self.cfg.cache_bytes)
+        self.flusher = Flusher(self.table, self.index_wal, self.value_wal,
+                               self.cfg.flusher_threads, self.metrics)
+        self.relocator = Relocator(self.table, self.value_wal, self.metrics)
+        self._ks_by_name = self.table.by_name
+        self._closed = False
+
+        self._recover()
+
+        self._snapshot_thread = None
+        if self.cfg.background_snapshots:
+            self._snapshot_thread = SnapshotThread(self, self.cfg.snapshot_interval_s)
+            self._snapshot_thread.start()
+        self._relocator_thread = None
+        if self.cfg.relocation:
+            self._relocator_thread = RelocatorThread(
+                self.relocator, self.cfg.relocation_interval_s)
+            self._relocator_thread.start()
+
+    # ------------------------------------------------------------- recovery
+    def _recover(self) -> None:
+        """§3.4: read Control Region, restore cell pointers, replay the WAL
+        suffix.  Cells start UNLOADED; indices load lazily on demand."""
+        state = read_control_region(self.path)
+        replay_from = self.value_wal.first_live_pos
+        if state is not None:
+            replay_from = max(state["replay_from"], self.value_wal.first_live_pos)
+            self.value_wal.first_live_pos = max(self.value_wal.first_live_pos,
+                                                state["value_first_live"])
+            self.index_wal.first_live_pos = max(self.index_wal.first_live_pos,
+                                                state["index_first_live"])
+            for seg, rng in state.get("segment_epochs", {}).items():
+                self.value_wal._segment_epochs[int(seg)] = (rng[0], rng[1])
+            for ks_id, cid, dpos, dlen, dcount, upto in state["cells"]:
+                ks = self.table.ks(ks_id)
+                if isinstance(cid, (bytes, bytearray)):
+                    cell = ks.cell_for_key(bytes(cid))
+                else:
+                    cell = ks.cells.get(cid)
+                if cell is None:
+                    continue
+                cell.disk_pos, cell.disk_len, cell.disk_count = dpos, dlen, dcount
+                cell.flushed_upto = upto
+                cell.approx_keys = dcount
+                cell.state = CellState.UNLOADED if dcount > 0 else CellState.EMPTY
+            replay_from = max(replay_from, self.value_wal.first_live_pos)
+
+        # Replay the WAL suffix into the Large Table.
+        for pos, rtype, payload in self.value_wal.iter_records(replay_from):
+            if rtype == T_ENTRY:
+                ks_id, key, _value, epoch = decode_entry(payload)
+                marker = pos
+            elif rtype == T_TOMBSTONE:
+                ks_id, key, epoch = decode_tombstone(payload)
+                marker = TOMB_FLAG | pos
+            else:
+                continue
+            cell = self.table.ks(ks_id).cell_for_key(key)
+            if pos < cell.flushed_upto:
+                continue                     # already covered by flushed index
+            self.table.apply(ks_id, key, marker)
+        self.value_wal.tracker.reset(self.value_wal.tail)
+
+    # --------------------------------------------------------------- writes
+    def _ks_id(self, keyspace) -> int:
+        if isinstance(keyspace, int):
+            return keyspace
+        return self._ks_by_name[keyspace]
+
+    def put(self, key: bytes, value: bytes, keyspace=0, epoch: int = 0) -> int:
+        ks_id = self._ks_id(keyspace)
+        payload = encode_entry(ks_id, key, value, epoch)
+        pos = self.value_wal.append(T_ENTRY, payload, epoch,
+                                    app_bytes=len(key) + len(value))
+        self.table.apply(ks_id, key, pos)
+        self.value_wal.mark_processed(pos, len(payload))
+        self.cache.invalidate(self._cache_key(ks_id, key))
+        return pos
+
+    def delete(self, key: bytes, keyspace=0, epoch: int = 0) -> int:
+        ks_id = self._ks_id(keyspace)
+        payload = encode_tombstone(ks_id, key, epoch)
+        pos = self.value_wal.append(T_TOMBSTONE, payload, epoch, app_bytes=len(key))
+        self.table.apply(ks_id, key, TOMB_FLAG | pos)
+        self.value_wal.mark_processed(pos, len(payload))
+        self.cache.invalidate(self._cache_key(ks_id, key))
+        return pos
+
+    def write_batch(self, ops: Iterable[tuple], epoch: int = 0) -> None:
+        """Atomic batch (§3.1): ops are ("put", ks, key, value) or
+        ("del", ks, key).  One WAL allocation covers the whole batch."""
+        subrecords, metas = [], []
+        app_bytes = 0
+        for op in ops:
+            if op[0] == "put":
+                _, ks, key, value = op
+                ks_id = self._ks_id(ks)
+                subrecords.append((T_ENTRY, encode_entry(ks_id, key, value, epoch)))
+                metas.append((ks_id, key, False))
+                app_bytes += len(key) + len(value)
+            elif op[0] == "del":
+                _, ks, key = op
+                ks_id = self._ks_id(ks)
+                subrecords.append((T_TOMBSTONE, encode_tombstone(ks_id, key, epoch)))
+                metas.append((ks_id, key, True))
+                app_bytes += len(key)
+            else:
+                raise ValueError(f"unknown batch op {op[0]!r}")
+        if not subrecords:
+            return
+        batch_pos, sub_positions = self.value_wal.append_batch(
+            subrecords, epoch, app_bytes=app_bytes)
+        for (ks_id, key, is_del), pos in zip(metas, sub_positions):
+            marker = (TOMB_FLAG | pos) if is_del else pos
+            self.table.apply(ks_id, key, marker)
+            self.cache.invalidate(self._cache_key(ks_id, key))
+        body_len = sum(HEADER_SIZE + len(p) for _, p in subrecords)
+        self.value_wal.mark_processed(batch_pos, body_len)
+
+    # ---------------------------------------------------------------- reads
+    def _cache_key(self, ks_id: int, key: bytes) -> bytes:
+        return bytes([ks_id]) + key
+
+    def get(self, key: bytes, keyspace=0) -> Optional[bytes]:
+        ks_id = self._ks_id(keyspace)
+        ck = self._cache_key(ks_id, key)
+        v = self.cache.get(ck)
+        if v is not None:
+            self.metrics.add(cache_hits=1)
+            return v
+        self.metrics.add(cache_misses=1)
+        for _attempt in range(2):           # retry once across concurrent GC
+            pos = self.table.get_position(ks_id, key)
+            if pos is None or pos < self.value_wal.first_live_pos:
+                return None                  # absent or epoch-pruned
+            try:
+                rtype, payload = self.value_wal.read_record(pos)
+            except KeyError:
+                continue                     # relocated underneath us: retry
+            if rtype == T_TOMBSTONE:
+                return None
+            _, _, value, _ = decode_entry(payload)
+            self.cache.put(ck, value)
+            return value
+        return None
+
+    def exists(self, key: bytes, keyspace=0) -> bool:
+        ks_id = self._ks_id(keyspace)
+        if self.cache.get(self._cache_key(ks_id, key)) is not None:
+            self.metrics.add(cache_hits=1)
+            return True
+        return self.table.exists(ks_id, key, self.value_wal.first_live_pos)
+
+    def prev(self, key: bytes, keyspace=0) -> Optional[tuple[bytes, bytes]]:
+        """Reverse iterator step: largest (key', value) with key' < key."""
+        ks_id = self._ks_id(keyspace)
+        k, pos = self.table.predecessor(ks_id, key, self.value_wal.first_live_pos)
+        while k is not None:
+            try:
+                rtype, payload = self.value_wal.read_record(pos)
+            except KeyError:
+                k, pos = self.table.predecessor(ks_id, k,
+                                                self.value_wal.first_live_pos)
+                continue
+            if rtype == T_ENTRY:
+                _, _, value, _ = decode_entry(payload)
+                return k, value
+            k, pos = self.table.predecessor(ks_id, k,
+                                            self.value_wal.first_live_pos)
+        return None
+
+    # ------------------------------------------------------------- lifecycle
+    def snapshot_now(self, flush_threshold: int = 1) -> dict:
+        """Flush eligible cells, persist the Control Region, GC old indices."""
+        self.flusher.flush_dirty(threshold=flush_threshold, wait=True)
+        state = capture_state(self.table, self.value_wal, self.index_wal)
+        write_control_region(self.path, state)
+        min_idx = self.table.min_index_store_pos()
+        if min_idx is not None:
+            # One-segment slack so in-flight readers of just-replaced blobs
+            # never observe a closed fd.
+            slack = self.index_wal.cfg.segment_size
+            self.index_wal.advance_gc_watermark(max(0, min_idx - HEADER_SIZE - slack))
+        self._maybe_evict()
+        return state
+
+    def _maybe_evict(self) -> None:
+        """Unload clean cells when the Large Table exceeds its budget."""
+        if self.table.mem_entries <= self.cfg.mem_budget_entries:
+            return
+        for ks_id, cell in self.table.all_cells():
+            if self.table.mem_entries <= self.cfg.mem_budget_entries * 0.9:
+                break
+            if cell.state == CellState.LOADED:
+                self.table.evict_cell(ks_id, cell)
+
+    def flush(self) -> None:
+        """Strong durability point: everything fsynced + control updated."""
+        self.snapshot_now(flush_threshold=1)
+        self.value_wal.flush()
+        self.index_wal.flush()
+
+    def prune_epochs_below(self, epoch: int) -> int:
+        return self.relocator.prune_epochs_below(epoch)
+
+    def close(self, flush: bool = True) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self._relocator_thread:
+            self._relocator_thread.stop()
+        if self._snapshot_thread:
+            self._snapshot_thread.stop()
+        if flush:
+            self.flush()
+        self.flusher.close()
+        self.value_wal.close()
+        self.index_wal.close()
+
+    # ------------------------------------------------------------- insights
+    def stats(self) -> dict:
+        s = self.metrics.snapshot()
+        s.update(
+            wal_tail=self.value_wal.tail,
+            wal_live_bytes=self.value_wal.tail - self.value_wal.first_live_pos,
+            mem_entries=self.table.mem_entries,
+        )
+        return s
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

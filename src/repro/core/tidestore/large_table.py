@@ -1,0 +1,381 @@
+"""The Large Table: sharded, lazily-resident key → WAL-position index (§4.1).
+
+- Keys partition into **cells**.  Uniform keyspaces (hash keys) use a
+  pre-allocated fixed array of cells; prefix keyspaces grow a dynamic map
+  (the paper's B-tree mode) keyed by the key prefix.
+- Cells group into **rows** protected by sharded mutexes, so operations on
+  different key ranges never contend.
+- Each cell is in one of five states (paper Fig./§4.1):
+  EMPTY, LOADED, UNLOADED, DIRTY_LOADED, DIRTY_UNLOADED.  DirtyUnloaded is
+  the crucial one: a write to a cold cell buffers only the new entry and
+  never forces a multi-megabyte index load.
+- Reads on unloaded cells go through the optimistic (or header) on-disk
+  lookup — a point read into the Index Store, not a full load (§3.2).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+from .bloom import BloomFilter
+from .index import (FORMATS, POS_MASK, TOMB_FLAG, entry_size, is_tombstone,
+                    real_pos)
+from .util import Metrics
+
+
+class CellState(Enum):
+    EMPTY = 0
+    LOADED = 1
+    UNLOADED = 2
+    DIRTY_LOADED = 3
+    DIRTY_UNLOADED = 4
+
+
+@dataclass
+class KeyspaceConfig:
+    name: str
+    key_len: int = 32
+    distribution: str = "uniform"          # "uniform" | "prefix"
+    n_cells: int = 256                     # uniform: fixed cell array size
+    prefix_len: int = 4                    # prefix mode: bytes of key per cell
+    n_rows: int = 64                       # sharded mutex count
+    index_format: str = "optimistic"       # "optimistic" | "header"
+    window_entries: int = 800              # optimistic read window (§4.2)
+    bloom_bits_per_key: int = 10
+    use_bloom: bool = True
+    dirty_flush_threshold: int = 4096      # entries before background flush
+
+
+class Cell:
+    __slots__ = ("cell_id", "state", "mem", "disk_pos", "disk_len", "disk_count",
+                 "flushed_upto", "min_dirty_pos", "bloom", "flushing", "approx_keys")
+
+    def __init__(self, cell_id):
+        self.cell_id = cell_id
+        self.state = CellState.EMPTY
+        self.mem: dict[bytes, int] = {}
+        self.disk_pos: Optional[int] = None   # Index Store payload offset
+        self.disk_len: int = 0
+        self.disk_count: int = 0
+        self.flushed_upto: int = 0             # WAL covered by the disk index
+        self.min_dirty_pos: Optional[int] = None
+        self.bloom: Optional[BloomFilter] = None
+        self.flushing = False
+        self.approx_keys = 0                   # for bloom sizing
+
+    @property
+    def dirty_count(self) -> int:
+        if self.state in (CellState.DIRTY_LOADED, CellState.DIRTY_UNLOADED):
+            return len(self.mem)
+        return 0
+
+    def has_disk(self) -> bool:
+        return self.disk_pos is not None and self.disk_count > 0
+
+
+class Keyspace:
+    def __init__(self, ks_id: int, cfg: KeyspaceConfig, metrics: Metrics):
+        self.ks_id = ks_id
+        self.cfg = cfg
+        self.metrics = metrics
+        self._rows = [threading.RLock() for _ in range(cfg.n_rows)]
+        if cfg.distribution == "uniform":
+            # Pre-allocated fixed-size cell array (§4.1, uniform keys).
+            self.cells: dict = {i: Cell(i) for i in range(cfg.n_cells)}
+            self._prefixes = None
+        else:
+            # Dynamic prefix map — grows with new prefixes (B-tree mode).
+            self.cells = {}
+            self._prefixes: list[bytes] = []   # kept sorted (bisect)
+            self._prefix_lock = threading.Lock()
+
+    # ---------------------------------------------------------- cell lookup
+    def cell_id_for_key(self, key: bytes) -> object:
+        if self.cfg.distribution == "uniform":
+            h = int.from_bytes(key[:4].ljust(4, b"\x00"), "big")
+            return (h * self.cfg.n_cells) >> 32
+        return key[: self.cfg.prefix_len]
+
+    def cell_for_key(self, key: bytes, create: bool = True) -> Optional[Cell]:
+        cid = self.cell_id_for_key(key)
+        cell = self.cells.get(cid)
+        if cell is None and self.cfg.distribution == "prefix" and create:
+            import bisect
+            with self._prefix_lock:
+                cell = self.cells.get(cid)
+                if cell is None:
+                    cell = Cell(cid)
+                    self.cells[cid] = cell
+                    bisect.insort(self._prefixes, cid)
+        return cell
+
+    def row_lock(self, cell_id) -> threading.RLock:
+        return self._rows[hash(cell_id) % self.cfg.n_rows]
+
+    def ordered_cell_ids(self) -> list:
+        if self.cfg.distribution == "uniform":
+            return list(range(self.cfg.n_cells))
+        with self._prefix_lock:
+            return list(self._prefixes)
+
+    def prev_cell_id(self, cid) -> Optional[object]:
+        if self.cfg.distribution == "uniform":
+            return cid - 1 if cid > 0 else None
+        import bisect
+        with self._prefix_lock:
+            i = bisect.bisect_left(self._prefixes, cid)
+            return self._prefixes[i - 1] if i > 0 else None
+
+
+class LargeTable:
+    """All keyspaces + the read/update protocol against the Index Store."""
+
+    def __init__(self, keyspaces: list[KeyspaceConfig], index_pread,
+                 metrics: Optional[Metrics] = None):
+        self.metrics = metrics or Metrics()
+        self.keyspaces = [Keyspace(i, cfg, self.metrics)
+                          for i, cfg in enumerate(keyspaces)]
+        self.by_name = {cfg.name: i for i, cfg in enumerate(keyspaces)}
+        self._index_pread = index_pread        # (pos, n) -> bytes, Index Store
+        self.mem_entries = 0                   # global residency counter
+        self._mem_lock = threading.Lock()
+
+    def ks(self, ks_id: int) -> Keyspace:
+        return self.keyspaces[ks_id]
+
+    def _bump_mem(self, delta: int) -> None:
+        with self._mem_lock:
+            self.mem_entries += delta
+
+    # --------------------------------------------------------------- writes
+    def apply(self, ks_id: int, key: bytes, pos_marker: int) -> bool:
+        """Apply a write (insert or tombstone, per TOMB_FLAG) to the table.
+        Conflict rule (§3.1): the operation with the higher WAL position wins.
+        Returns True if the table changed."""
+        ks = self.ks(ks_id)
+        cell = ks.cell_for_key(key)
+        with ks.row_lock(cell.cell_id):
+            cur = cell.mem.get(key)
+            if cur is not None and real_pos(cur) >= real_pos(pos_marker):
+                return False
+            if cur is None:
+                self._bump_mem(1)
+            cell.mem[key] = pos_marker
+            p = real_pos(pos_marker)
+            if cell.min_dirty_pos is None or p < cell.min_dirty_pos:
+                cell.min_dirty_pos = p
+            if not is_tombstone(pos_marker):
+                cell.approx_keys += 0 if cur is not None else 1
+                if cell.bloom is not None:
+                    cell.bloom.add(key)
+            if cell.state == CellState.EMPTY:
+                cell.state = CellState.DIRTY_LOADED
+            elif cell.state == CellState.LOADED:
+                cell.state = CellState.DIRTY_LOADED
+            elif cell.state == CellState.UNLOADED:
+                cell.state = CellState.DIRTY_UNLOADED   # buffer only (§4.1)
+            return True
+
+    def compare_and_set(self, ks_id: int, key: bytes, expect_pos: int,
+                        new_marker: int) -> bool:
+        """Relocation CAS (§4.4): update only if the key still points at
+        ``expect_pos``; a concurrent write to a higher position wins."""
+        ks = self.ks(ks_id)
+        cell = ks.cell_for_key(key)
+        with ks.row_lock(cell.cell_id):
+            cur, _ = self._position_locked(ks, cell, key)
+            if cur is None or real_pos(cur) != expect_pos:
+                return False
+            if cell.mem.get(key) is None:
+                self._bump_mem(1)
+            cell.mem[key] = new_marker
+            p = real_pos(new_marker)
+            if cell.min_dirty_pos is None or p < cell.min_dirty_pos:
+                cell.min_dirty_pos = p
+            if cell.state == CellState.UNLOADED:
+                cell.state = CellState.DIRTY_UNLOADED
+            elif cell.state == CellState.LOADED:
+                cell.state = CellState.DIRTY_LOADED
+            elif cell.state == CellState.EMPTY:
+                cell.state = CellState.DIRTY_LOADED
+            return True
+
+    # ---------------------------------------------------------------- reads
+    def _disk_lookup(self, ks: Keyspace, cell: Cell, key: bytes) -> Optional[int]:
+        if not cell.has_disk():
+            return None
+        _, lookup_cls, _ = FORMATS[ks.cfg.index_format]
+        base = cell.disk_pos
+        pread = lambda off, n: self._index_pread(base + off, min(n, cell.disk_len - off))
+        lk = lookup_cls(pread, cell.disk_count, ks.cfg.key_len,
+                        window_entries=ks.cfg.window_entries, metrics=self.metrics)
+        pos, _ = lk.lookup(key)
+        return pos
+
+    def _position_locked(self, ks: Keyspace, cell: Cell,
+                         key: bytes) -> tuple[Optional[int], bool]:
+        """Effective position marker for key; (marker, was_from_disk)."""
+        cur = cell.mem.get(key)
+        if cur is not None:
+            return cur, False
+        if cell.state in (CellState.LOADED, CellState.DIRTY_LOADED):
+            return None, False                 # fully resident: absent
+        disk = self._disk_lookup(ks, cell, key)
+        return (disk, True) if disk is not None else (None, True)
+
+    def get_position(self, ks_id: int, key: bytes) -> Optional[int]:
+        """Key → WAL position marker (tombstones yield None)."""
+        ks = self.ks(ks_id)
+        cell = ks.cell_for_key(key, create=False)
+        if cell is None:
+            return None
+        with ks.row_lock(cell.cell_id):
+            marker, _ = self._position_locked(ks, cell, key)
+        if marker is None or is_tombstone(marker):
+            return None
+        return real_pos(marker)
+
+    def exists(self, ks_id: int, key: bytes, min_live_pos: int = 0) -> bool:
+        """Existence check resolved entirely from index state (§3.2) —
+        never touches the Value WAL.  This is the 15.6× operation."""
+        ks = self.ks(ks_id)
+        cell = ks.cell_for_key(key, create=False)
+        if cell is None:
+            return False
+        with ks.row_lock(cell.cell_id):
+            if cell.bloom is not None and not cell.bloom.might_contain(key):
+                self.metrics.add(bloom_negative=1)
+                return False
+            marker, _ = self._position_locked(ks, cell, key)
+        if marker is None or is_tombstone(marker):
+            return False
+        return real_pos(marker) >= min_live_pos
+
+    # -------------------------------------------------------- load / evict
+    def load_cell(self, ks_id: int, cell: Cell) -> None:
+        """Bring a cell fully into memory (disk index ∪ dirty buffer)."""
+        ks = self.ks(ks_id)
+        with ks.row_lock(cell.cell_id):
+            if cell.state in (CellState.LOADED, CellState.DIRTY_LOADED,
+                              CellState.EMPTY):
+                return
+            disk_entries = self._load_disk_entries(ks, cell)
+            added = 0
+            for k, p in disk_entries:
+                cur = cell.mem.get(k)
+                if cur is None:
+                    cell.mem[k] = p
+                    added += 1
+                # else: mem entry is newer (higher pos) by construction
+            self._bump_mem(added)
+            cell.state = (CellState.DIRTY_LOADED
+                          if cell.state == CellState.DIRTY_UNLOADED
+                          else CellState.LOADED)
+
+    def _load_disk_entries(self, ks: Keyspace, cell: Cell) -> list[tuple[bytes, int]]:
+        if not cell.has_disk():
+            return []
+        _, _, load_fn = FORMATS[ks.cfg.index_format]
+        base = cell.disk_pos
+        pread = lambda off, n: self._index_pread(base + off, min(n, cell.disk_len - off))
+        return load_fn(pread, cell.disk_count, ks.cfg.key_len)
+
+    def evict_cell(self, ks_id: int, cell: Cell) -> bool:
+        """LOADED → UNLOADED under memory pressure (clean cells only)."""
+        ks = self.ks(ks_id)
+        with ks.row_lock(cell.cell_id):
+            if cell.state != CellState.LOADED or cell.flushing:
+                return False
+            self._bump_mem(-len(cell.mem))
+            cell.mem = {}
+            cell.state = CellState.UNLOADED if cell.has_disk() else CellState.EMPTY
+            return True
+
+    # ------------------------------------------------------------ iteration
+    def dirty_cells(self, threshold: int = 0) -> Iterator[tuple[int, Cell]]:
+        for ks in self.keyspaces:
+            th = threshold if threshold > 0 else ks.cfg.dirty_flush_threshold
+            for cell in list(ks.cells.values()):
+                if cell.dirty_count >= max(1, th) and not cell.flushing:
+                    yield ks.ks_id, cell
+
+    def all_cells(self) -> Iterator[tuple[int, Cell]]:
+        for ks in self.keyspaces:
+            for cell in list(ks.cells.values()):
+                yield ks.ks_id, cell
+
+    def min_index_store_pos(self) -> Optional[int]:
+        """Oldest Index Store payload still referenced (Index Store GC bound)."""
+        out = None
+        for _, cell in self.all_cells():
+            if cell.has_disk():
+                out = cell.disk_pos if out is None else min(out, cell.disk_pos)
+        return out
+
+    def replay_from(self, last_processed: int) -> int:
+        """Snapshot replay-from (§3.3): min over cells of the earliest
+        unflushed position; cells with no dirty data contribute nothing."""
+        out = last_processed
+        for _, cell in self.all_cells():
+            if cell.dirty_count > 0 and cell.min_dirty_pos is not None:
+                out = min(out, cell.min_dirty_pos)
+        return out
+
+    # -------------------------------------------------------- reverse iter
+    def predecessor(self, ks_id: int, key: bytes,
+                    min_live_pos: int = 0) -> tuple[Optional[bytes], Optional[int]]:
+        """Largest key strictly smaller than ``key`` with a live value
+        position (the paper's reverse-iterator read op)."""
+        ks = self.ks(ks_id)
+        cid = ks.cell_id_for_key(key)
+        probe = key
+        while cid is not None:
+            cell = ks.cells.get(cid)
+            if cell is not None:
+                found = self._cell_predecessor(ks, cell, probe, min_live_pos)
+                if found is not None:
+                    return found
+            cid = ks.prev_cell_id(cid)
+            probe = b"\xff" * ks.cfg.key_len     # max key for earlier cells
+        return None, None
+
+    def _cell_predecessor(self, ks: Keyspace, cell: Cell, key: bytes,
+                          min_live_pos: int):
+        with ks.row_lock(cell.cell_id):
+            # Candidates from the in-memory buffer (may include tombstones).
+            mem_items = sorted(k for k in cell.mem if k < key)
+            disk_arr = None
+            if cell.state in (CellState.UNLOADED, CellState.DIRTY_UNLOADED) \
+                    and cell.has_disk():
+                _, lookup_cls, _ = FORMATS[ks.cfg.index_format]
+                base = cell.disk_pos
+                pread = lambda off, n: self._index_pread(
+                    base + off, min(n, cell.disk_len - off))
+                lk = lookup_cls(pread, cell.disk_count, ks.cfg.key_len,
+                                window_entries=ks.cfg.window_entries,
+                                metrics=self.metrics)
+                disk_arr = lk
+            probe = key
+            while True:
+                best_key, best_marker = None, None
+                while mem_items and mem_items[-1] >= probe:
+                    mem_items.pop()
+                if mem_items:
+                    best_key = mem_items[-1]
+                    best_marker = cell.mem[best_key]
+                if disk_arr is not None:
+                    dk, dp, _ = disk_arr.predecessor(probe)
+                    if dk is not None and (best_key is None or dk > best_key):
+                        best_key, best_marker = dk, dp
+                    elif dk is not None and dk == best_key:
+                        pass                     # mem wins (newer)
+                if best_key is None:
+                    return None
+                if not is_tombstone(best_marker) \
+                        and real_pos(best_marker) >= min_live_pos:
+                    return best_key, real_pos(best_marker)
+                probe = best_key                 # skip tombstone, continue left

@@ -1,0 +1,226 @@
+"""Relocation and epoch pruning (§4.4).
+
+Relocation reclaims Value WAL space by re-appending live entries at the tail
+and deleting old segment files.  Correctness under concurrent writes uses
+compare-and-set against the captured watermark: an entry read at position P
+is re-applied only if the index still points at P; a concurrent write that
+moved the key to P'' > L wins and the relocated copy is simply ignored
+(it becomes dead bytes reclaimed by the *next* relocation pass).
+
+Two strategies, as in the paper:
+- **WAL-based**: sequential scan of the oldest segments; liveness = "does
+  the index still point here".
+- **Index-based**: iterate cells, pick entries whose positions fall below
+  the cutoff, read just those values.
+
+Plus the blockchain-style fast path: **epoch pruning** drops whole segments
+whose epoch range has expired without relocating a single byte.
+"""
+from __future__ import annotations
+
+import threading
+from enum import Enum
+from typing import Callable, Optional
+
+from .index import TOMB_FLAG, is_tombstone, real_pos
+from .large_table import CellState, LargeTable
+from .util import Metrics
+from .wal import (T_ENTRY, T_TOMBSTONE, Wal, decode_entry, decode_tombstone,
+                  encode_entry, encode_tombstone)
+
+
+class Decision(Enum):
+    KEEP = 0
+    REMOVE = 1
+    STOP = 2
+
+
+# filter(key, value_or_None, epoch) -> Decision
+RelocationFilter = Callable[[bytes, Optional[bytes], int], Decision]
+
+
+class Relocator:
+    def __init__(self, table: LargeTable, value_wal: Wal,
+                 metrics: Optional[Metrics] = None):
+        self.table = table
+        self.wal = value_wal
+        self.metrics = metrics or Metrics()
+        self._lock = threading.Lock()          # single relocator at a time
+
+    # ------------------------------------------------------------ strategies
+    def relocate_wal_based(self, cutoff: Optional[int] = None,
+                           filt: Optional[RelocationFilter] = None) -> int:
+        """Scan the WAL from the oldest live position up to ``cutoff`` and
+        re-append live entries.  Returns entries relocated."""
+        with self._lock:
+            cutoff = self._effective_cutoff(cutoff)
+            start = self.wal.first_live_pos
+            moved = 0
+            stopped = False
+            for pos, rtype, payload in self.wal.iter_records(start, cutoff):
+                if rtype == T_ENTRY:
+                    ks_id, key, value, epoch = decode_entry(payload)
+                    action = self._maybe_relocate(ks_id, key, value, epoch,
+                                                  pos, False, filt)
+                elif rtype == T_TOMBSTONE:
+                    ks_id, key, epoch = decode_tombstone(payload)
+                    action = self._maybe_relocate(ks_id, key, None, epoch,
+                                                  pos, True, filt)
+                else:
+                    continue
+                if action == Decision.STOP:
+                    stopped = True
+                    cutoff = pos               # everything below pos is clear
+                    break
+                moved += 1 if action == Decision.KEEP else 0
+            self.wal.advance_gc_watermark(cutoff)
+            return moved
+
+    def relocate_index_based(self, cutoff: Optional[int] = None,
+                             filt: Optional[RelocationFilter] = None) -> int:
+        """Iterate Large Table cells; relocate entries below the cutoff."""
+        with self._lock:
+            cutoff = self._effective_cutoff(cutoff)
+            moved = 0
+            for ks_id, cell in self.table.all_cells():
+                ks = self.table.ks(ks_id)
+                with ks.row_lock(cell.cell_id):
+                    disk = self.table._load_disk_entries(ks, cell) \
+                        if cell.state in (CellState.UNLOADED,
+                                          CellState.DIRTY_UNLOADED) else []
+                    candidates = {k: p for k, p in disk
+                                  if p < cutoff and cell.mem.get(k) is None}
+                    for k, m in cell.mem.items():
+                        if real_pos(m) < cutoff:
+                            candidates[k] = m
+                for key, marker in candidates.items():
+                    pos = real_pos(marker)
+                    if is_tombstone(marker):
+                        action = self._maybe_relocate(ks_id, key, None, 0,
+                                                      pos, True, filt)
+                    else:
+                        try:
+                            rtype, payload = self.wal.read_record(pos)
+                        except KeyError:
+                            continue           # already pruned / concurrent GC
+                        _, k2, value, epoch = decode_entry(payload)
+                        action = self._maybe_relocate(ks_id, key, value, epoch,
+                                                      pos, False, filt)
+                    if action == Decision.STOP:
+                        self.wal.advance_gc_watermark(min(cutoff, pos))
+                        return moved
+                    moved += 1 if action == Decision.KEEP else 0
+            self.wal.advance_gc_watermark(cutoff)
+            return moved
+
+    # --------------------------------------------------------------- helpers
+    def _effective_cutoff(self, cutoff: Optional[int]) -> int:
+        # Never reclaim past the processed watermark (the paper's L).
+        last = self.wal.tracker.last_processed
+        if cutoff is None:
+            return last
+        return min(cutoff, last)
+
+    def _maybe_relocate(self, ks_id: int, key: bytes, value: Optional[bytes],
+                        epoch: int, pos: int, tombstone: bool,
+                        filt: Optional[RelocationFilter]) -> Decision:
+        # Liveness: index must still point exactly at this position (§4.4).
+        cur = self.table.get_position(ks_id, key) if not tombstone else None
+        if tombstone:
+            ks = self.table.ks(ks_id)
+            cell = ks.cell_for_key(key, create=False)
+            if cell is None:
+                return Decision.REMOVE
+            with ks.row_lock(cell.cell_id):
+                marker, _ = self.table._position_locked(ks, cell, key)
+            live = marker is not None and is_tombstone(marker) \
+                and real_pos(marker) == pos
+        else:
+            live = cur == pos
+        if not live:
+            return Decision.REMOVE             # dead bytes: nothing to move
+        if filt is not None:
+            d = filt(key, value, epoch)
+            if d == Decision.STOP:
+                return d
+            if d == Decision.REMOVE:
+                if tombstone:
+                    # Dropping a live tombstone = forgetting the delete: only
+                    # safe because the covering index has no older value (we
+                    # drop tombstones at flush), so just erase from mem.
+                    self._erase_mem_tombstone(ks_id, key, pos)
+                else:
+                    self.table.compare_and_set(ks_id, key, pos,
+                                               TOMB_FLAG | pos)
+                return Decision.REMOVE
+        # Re-append at the tail; CAS the index to the new position.
+        if tombstone:
+            payload = encode_tombstone(ks_id, key, epoch)
+            new_pos = self.wal.append(T_TOMBSTONE, payload, epoch, app_bytes=0)
+            ok = self.table.compare_and_set(ks_id, key, pos, TOMB_FLAG | new_pos)
+        else:
+            payload = encode_entry(ks_id, key, value, epoch)
+            new_pos = self.wal.append(T_ENTRY, payload, epoch, app_bytes=0)
+            ok = self.table.compare_and_set(ks_id, key, pos, new_pos)
+        self.wal.mark_processed(new_pos, len(payload))
+        if ok:
+            self.metrics.add(relocated_entries=1,
+                             relocated_bytes=len(payload))
+        return Decision.KEEP
+
+    def _erase_mem_tombstone(self, ks_id: int, key: bytes, pos: int) -> None:
+        ks = self.table.ks(ks_id)
+        cell = ks.cell_for_key(key, create=False)
+        if cell is None:
+            return
+        with ks.row_lock(cell.cell_id):
+            m = cell.mem.get(key)
+            if m is not None and is_tombstone(m) and real_pos(m) == pos:
+                del cell.mem[key]
+                self.table._bump_mem(-1)
+
+    # --------------------------------------------------------- epoch pruning
+    def prune_epochs_below(self, epoch: int) -> int:
+        """Drop whole WAL segments whose epoch range expired (§4.4 /
+        blockchain pruning).  Zero bytes relocated; reads of pruned positions
+        resolve to absent via the first_live_pos check."""
+        segs = self.wal.segments_expired_below_epoch(epoch)
+        if not segs:
+            return 0
+        new_first = (max(segs) + 1) * self.wal.cfg.segment_size
+        self.wal.advance_gc_watermark(new_first)
+        return len(segs)
+
+
+class RelocatorThread:
+    """Single background relocator (§5: 'A single relocator thread')."""
+
+    def __init__(self, relocator: Relocator, interval_s: float = 1.0,
+                 reclaim_fraction: float = 0.25,
+                 filt: Optional[RelocationFilter] = None):
+        self.relocator = relocator
+        self.interval = interval_s
+        self.reclaim_fraction = reclaim_fraction
+        self.filt = filt
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="tide-relocator")
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval):
+            try:
+                wal = self.relocator.wal
+                live_span = wal.tail - wal.first_live_pos
+                cutoff = wal.first_live_pos + int(live_span * self.reclaim_fraction)
+                if cutoff > wal.first_live_pos:
+                    self.relocator.relocate_wal_based(cutoff, self.filt)
+            except Exception:  # pragma: no cover
+                import traceback
+                traceback.print_exc()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=5)

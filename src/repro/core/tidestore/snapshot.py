@@ -1,0 +1,103 @@
+"""Control Region snapshots (§3.3).
+
+A snapshot stores *only positions*, never index data: for each cell the
+Index Store offset of its latest flushed index and the WAL watermark it
+covers, plus a global replay-from position.  Written atomically
+(tmp + rename) with a CRC, so a torn snapshot write falls back to the
+previous one.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import threading
+import time
+from typing import Optional
+
+import msgpack
+
+from .large_table import CellState, LargeTable
+from .util import Metrics, crc32
+from .wal import Wal
+
+CONTROL_FILE = "control.bin"
+_MAGIC = b"TIDE0001"
+
+
+def write_control_region(path: str, state: dict) -> None:
+    body = msgpack.packb(state, use_bin_type=True)
+    blob = _MAGIC + struct.pack("<I", crc32(body)) + body
+    # unique tmp name: concurrent snapshotters (background thread + an
+    # explicit flush) must not clobber each other's rename source
+    tmp = os.path.join(path, f"{CONTROL_FILE}.tmp.{os.getpid()}."
+                             f"{threading.get_ident()}")
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(path, CONTROL_FILE))
+
+
+def read_control_region(path: str) -> Optional[dict]:
+    fn = os.path.join(path, CONTROL_FILE)
+    if not os.path.exists(fn):
+        return None
+    with open(fn, "rb") as f:
+        blob = f.read()
+    if len(blob) < 12 or blob[:8] != _MAGIC:
+        return None
+    (crc,) = struct.unpack_from("<I", blob, 8)
+    body = blob[12:]
+    if crc32(body) != crc:
+        return None
+    return msgpack.unpackb(body, raw=False, strict_map_key=False)
+
+
+def capture_state(table: LargeTable, value_wal: Wal, index_wal: Wal) -> dict:
+    cells = []
+    for ks_id, cell in table.all_cells():
+        if not cell.has_disk():
+            continue
+        cid = cell.cell_id
+        cells.append((ks_id, cid if isinstance(cid, int) else cid,
+                      cell.disk_pos, cell.disk_len, cell.disk_count,
+                      cell.flushed_upto))
+    last = value_wal.tracker.last_processed
+    return {
+        "replay_from": table.replay_from(last),
+        "last_processed": last,
+        "value_first_live": value_wal.first_live_pos,
+        "index_first_live": index_wal.first_live_pos,
+        "segment_epochs": {str(k): list(v)
+                           for k, v in value_wal.segment_epochs().items()},
+        "cells": cells,
+        "time": time.time(),
+    }
+
+
+class SnapshotThread:
+    """Background engine (§3.3): periodically flushes cells above the dirty
+    threshold, persists the Control Region, and advances the Index Store GC
+    watermark to the oldest still-referenced index blob."""
+
+    def __init__(self, db, interval_s: float = 0.25):
+        self.db = db
+        self.interval = interval_s
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="tide-snapshot")
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval):
+            try:
+                self.db.snapshot_now(flush_threshold=0)
+            except Exception:  # pragma: no cover
+                import traceback
+                traceback.print_exc()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=5)

@@ -1,0 +1,90 @@
+"""Shared utilities for the tidestore engine.
+
+Implements the paper's "guard-based position tracking" (§3.1, §5): writers
+allocate WAL positions atomically, complete out of order, and a tracker
+maintains the highest *contiguous* fully-processed position.  That watermark
+is what snapshots persist (replay-from bound) and what relocation uses as its
+compare-and-set horizon ``L`` (§4.4).
+"""
+from __future__ import annotations
+
+import heapq
+import threading
+import zlib
+from dataclasses import dataclass, field
+
+
+def crc32(payload: bytes) -> int:
+    return zlib.crc32(payload) & 0xFFFFFFFF
+
+
+class PositionTracker:
+    """Tracks completion of [start, end) ranges and exposes the highest
+    contiguous watermark.  Mirrors the paper's asynchronous-controller
+    position tracking: writes complete in any order; ``last_processed``
+    advances only when every preceding byte has been processed."""
+
+    def __init__(self, start: int = 0):
+        self._lock = threading.Lock()
+        self._watermark = start
+        self._heap: list[tuple[int, int]] = []
+
+    def mark(self, start: int, end: int) -> int:
+        """Mark [start, end) processed; returns the new watermark."""
+        with self._lock:
+            heapq.heappush(self._heap, (start, end))
+            while self._heap and self._heap[0][0] <= self._watermark:
+                s, e = heapq.heappop(self._heap)
+                if e > self._watermark:
+                    self._watermark = e
+            return self._watermark
+
+    @property
+    def last_processed(self) -> int:
+        with self._lock:
+            return self._watermark
+
+    def reset(self, position: int) -> None:
+        with self._lock:
+            self._watermark = position
+            self._heap.clear()
+
+
+@dataclass
+class Metrics:
+    """Engine counters.  ``bytes_written_disk / bytes_written_app`` is the
+    write-amplification figure the paper reports (§2.2, §6)."""
+
+    bytes_written_app: int = 0
+    bytes_written_disk: int = 0
+    bytes_read_disk: int = 0
+    wal_appends: int = 0
+    index_flushes: int = 0
+    index_lookups: int = 0
+    index_lookup_iterations: int = 0
+    bloom_negative: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    relocated_entries: int = 0
+    relocated_bytes: int = 0
+    segments_deleted: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def add(self, **kwargs: int) -> None:
+        with self._lock:
+            for k, v in kwargs.items():
+                setattr(self, k, getattr(self, k) + v)
+
+    @property
+    def write_amplification(self) -> float:
+        if self.bytes_written_app == 0:
+            return 0.0
+        return self.bytes_written_disk / self.bytes_written_app
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                k: getattr(self, k)
+                for k in self.__dataclass_fields__
+                if not k.startswith("_")
+            }

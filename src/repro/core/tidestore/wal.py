@@ -1,0 +1,418 @@
+"""Segmented append-only Write-Ahead Log — the permanent value store (§3.1).
+
+Design notes (mapping to the paper):
+
+- The WAL is a sequence of fixed-size *segments* (the paper's memory-mapped
+  "maps" / files).  A global byte position addresses the whole log:
+  ``segment = pos // segment_size``, ``offset = pos % segment_size``.
+- **Atomic allocation, parallel copy**: ``append`` grabs the allocation lock
+  only to bump the tail and write the 9-byte record header; the (large) value
+  payload is copied with ``os.pwrite`` *outside* the lock, so concurrent
+  writers saturate the device.  Because headers are written under the
+  allocation lock in position order, replay always knows record boundaries
+  even when a payload write was torn by a crash (CRC catches it, ``len``
+  lets us skip it).
+- Records never span segments: if a record does not fit in the remainder of
+  the current segment the tail jumps to the next segment boundary and the
+  remainder stays zero (type 0 == padding == "go to next segment").
+- The *asynchronous controller* is two background threads, mirroring §5:
+  a **mapper** (pre-allocates the next segment file; deletes segments below
+  the GC watermark) and a **syncer** (fsyncs finalized segments).  Position
+  completion tracking (the paper's third thread) is the inline
+  ``PositionTracker``.
+- Batches (§3.1 "Atomic batch writes") are one outer BATCH record whose
+  payload is a sequence of ordinary sub-records; replay validates every
+  sub-record CRC and discards the whole batch on a torn write.
+
+The Index Store reuses this exact class (§4.3: "The Index Store shares the
+same append-only implementation as the Value WAL").
+"""
+from __future__ import annotations
+
+import os
+import struct
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterator, Optional
+
+from .util import Metrics, PositionTracker, crc32
+
+# Record types.
+T_PAD = 0        # zeroed space at segment end: jump to next segment
+T_ENTRY = 1      # key/value insert
+T_TOMBSTONE = 2  # key delete
+T_BATCH = 3      # atomic batch: payload is a run of sub-records
+T_INDEX = 4      # serialized cell index blob (Index Store)
+
+_HDR = struct.Struct("<BII")     # type, payload_len, payload_crc
+HEADER_SIZE = _HDR.size          # 9 bytes
+_ENTRY_HDR = struct.Struct("<HHQ")  # keyspace_id, key_len, epoch
+
+
+def encode_entry(ks: int, key: bytes, value: bytes, epoch: int = 0) -> bytes:
+    return _ENTRY_HDR.pack(ks, len(key), epoch) + key + value
+
+
+def decode_entry(payload: bytes) -> tuple[int, bytes, bytes, int]:
+    ks, klen, epoch = _ENTRY_HDR.unpack_from(payload, 0)
+    off = _ENTRY_HDR.size
+    return ks, payload[off:off + klen], payload[off + klen:], epoch
+
+
+def encode_tombstone(ks: int, key: bytes, epoch: int = 0) -> bytes:
+    return _ENTRY_HDR.pack(ks, len(key), epoch) + key
+
+
+def decode_tombstone(payload: bytes) -> tuple[int, bytes, int]:
+    ks, klen, epoch = _ENTRY_HDR.unpack_from(payload, 0)
+    off = _ENTRY_HDR.size
+    return ks, payload[off:off + klen], epoch
+
+
+def make_record(rtype: int, payload: bytes) -> bytes:
+    return _HDR.pack(rtype, len(payload), crc32(payload)) + payload
+
+
+@dataclass
+class WalConfig:
+    segment_size: int = 4 * 1024 * 1024
+    sync_interval_s: float = 0.05
+    preallocate: bool = True
+    background: bool = True       # run mapper/syncer threads
+
+
+class Wal:
+    """Append-only segmented log with atomic position allocation."""
+
+    def __init__(self, directory: str, name: str, config: WalConfig | None = None,
+                 metrics: Metrics | None = None):
+        self.dir = directory
+        self.name = name
+        self.cfg = config or WalConfig()
+        self.metrics = metrics or Metrics()
+        os.makedirs(directory, exist_ok=True)
+
+        self._alloc_lock = threading.Lock()
+        self._fd_lock = threading.Lock()
+        self._fds: dict[int, int] = {}
+        self._dirty_segments: set[int] = set()
+        self._synced_upto = 0       # all segments below this idx fsynced+final
+        self.tracker = PositionTracker()
+
+        # Per-segment epoch ranges for epoch-granular pruning (§4.4 adapted):
+        # rebuilt on replay, persisted via the control region snapshot.
+        self._segment_epochs: dict[int, tuple[int, int]] = {}
+        self._epoch_lock = threading.Lock()
+
+        existing = self._scan_segments()
+        self.first_live_pos = (min(existing) * self.cfg.segment_size) if existing else 0
+        self._tail = (max(existing) * self.cfg.segment_size) if existing else 0
+        if existing:
+            self._tail = self._recover_tail(max(existing))
+        self.tracker.reset(self._tail)
+
+        self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+        if self.cfg.background:
+            for fn, label in ((self._mapper_loop, "mapper"), (self._syncer_loop, "syncer")):
+                t = threading.Thread(target=fn, name=f"{name}-{label}", daemon=True)
+                t.start()
+                self._threads.append(t)
+
+    # ------------------------------------------------------------- segments
+    def _segment_path(self, idx: int) -> str:
+        return os.path.join(self.dir, f"{self.name}-{idx:010d}.seg")
+
+    def _scan_segments(self) -> list[int]:
+        out = []
+        prefix = f"{self.name}-"
+        for fn in os.listdir(self.dir):
+            if fn.startswith(prefix) and fn.endswith(".seg"):
+                out.append(int(fn[len(prefix):-4]))
+        return sorted(out)
+
+    def _fd(self, idx: int, create: bool = False) -> int:
+        with self._fd_lock:
+            fd = self._fds.get(idx)
+            if fd is not None:
+                return fd
+            path = self._segment_path(idx)
+            flags = os.O_RDWR | (os.O_CREAT if create else 0)
+            fd = os.open(path, flags, 0o644)
+            if create and self.cfg.preallocate:
+                os.ftruncate(fd, self.cfg.segment_size)
+            self._fds[idx] = fd
+            return fd
+
+    def _recover_tail(self, last_idx: int) -> int:
+        """Walk the last segment's records to find the append tail."""
+        pos = last_idx * self.cfg.segment_size
+        end = pos + self.cfg.segment_size
+        while pos < end:
+            hdr = self._pread_raw(pos, HEADER_SIZE)
+            if len(hdr) < HEADER_SIZE:
+                break
+            rtype, length, crc = _HDR.unpack(hdr)
+            if rtype == T_PAD:
+                break
+            nxt = pos + HEADER_SIZE + length
+            if nxt > end:
+                break
+            pos = nxt
+        return pos
+
+    # ------------------------------------------------------------- appends
+    def append(self, rtype: int, payload: bytes, epoch: int = 0,
+               app_bytes: Optional[int] = None) -> int:
+        """Append one record; returns its WAL position.
+
+        The caller must later call ``mark_processed(pos)`` once the index
+        update for this record has been applied (write-flow step 4, §3.1).
+        """
+        rec_len = HEADER_SIZE + len(payload)
+        if rec_len > self.cfg.segment_size:
+            raise ValueError(f"record of {rec_len} B exceeds segment size")
+        header = _HDR.pack(rtype, len(payload), crc32(payload))
+        with self._alloc_lock:
+            pos = self._reserve(rec_len)
+            seg = pos // self.cfg.segment_size
+            fd = self._fd(seg, create=True)
+            os.pwrite(fd, header, pos % self.cfg.segment_size)
+            if epoch or rtype in (T_ENTRY, T_TOMBSTONE, T_BATCH):
+                self._note_epoch(seg, epoch)
+            self._dirty_segments.add(seg)
+        # The large payload copy happens outside the allocation lock.
+        os.pwrite(fd, payload, pos % self.cfg.segment_size + HEADER_SIZE)
+        self.metrics.add(bytes_written_disk=rec_len, wal_appends=1,
+                         bytes_written_app=app_bytes if app_bytes is not None else rec_len)
+        return pos
+
+    def append_batch(self, subrecords: list[tuple[int, bytes]],
+                     epoch: int = 0,
+                     app_bytes: Optional[int] = None) -> tuple[int, list[int]]:
+        """Atomically append a batch (§3.1).  Returns (batch_pos, sub_positions)."""
+        body = b"".join(make_record(t, p) for t, p in subrecords)
+        pos = self.append(T_BATCH, body, epoch=epoch, app_bytes=app_bytes)
+        sub_positions = []
+        off = pos + HEADER_SIZE
+        for t, p in subrecords:
+            sub_positions.append(off)
+            off += HEADER_SIZE + len(p)
+        return pos, sub_positions
+
+    def _reserve(self, rec_len: int) -> int:
+        """Bump the tail; roll to the next segment if the record won't fit."""
+        seg_size = self.cfg.segment_size
+        rem = seg_size - (self._tail % seg_size)
+        if rec_len > rem:
+            # Leave zero padding; replay jumps segments.  The padding counts
+            # as processed immediately or the watermark would stall here.
+            self.tracker.mark(self._tail, self._tail + rem)
+            self._tail += rem
+        pos = self._tail
+        self._tail += rec_len
+        return pos
+
+    def _note_epoch(self, seg: int, epoch: int) -> None:
+        with self._epoch_lock:
+            cur = self._segment_epochs.get(seg)
+            if cur is None:
+                self._segment_epochs[seg] = (epoch, epoch)
+            else:
+                self._segment_epochs[seg] = (min(cur[0], epoch), max(cur[1], epoch))
+
+    def mark_processed(self, pos: int, payload_len: int) -> int:
+        return self.tracker.mark(pos, pos + HEADER_SIZE + payload_len)
+
+    @property
+    def tail(self) -> int:
+        with self._alloc_lock:
+            return self._tail
+
+    # --------------------------------------------------------------- reads
+    def _pread_raw(self, pos: int, n: int) -> bytes:
+        seg = pos // self.cfg.segment_size
+        off = pos % self.cfg.segment_size
+        n = min(n, self.cfg.segment_size - off)
+        try:
+            fd = self._fd(seg)
+        except FileNotFoundError:
+            return b""
+        data = os.pread(fd, n, off)
+        self.metrics.add(bytes_read_disk=len(data))
+        return data
+
+    def pread(self, pos: int, n: int) -> bytes:
+        """Raw positional read (used for optimistic index windows)."""
+        return self._pread_raw(pos, n)
+
+    def read_record(self, pos: int, verify: bool = True) -> tuple[int, bytes]:
+        hdr = self._pread_raw(pos, HEADER_SIZE)
+        if len(hdr) < HEADER_SIZE:
+            raise KeyError(f"WAL position {pos} unreadable")
+        rtype, length, crc = _HDR.unpack(hdr)
+        payload = self._pread_raw(pos + HEADER_SIZE, length)
+        if len(payload) < length:
+            raise KeyError(f"WAL record at {pos} truncated")
+        if verify and crc32(payload) != crc:
+            raise KeyError(f"WAL record at {pos} failed CRC")
+        return rtype, payload
+
+    def iter_records(self, from_pos: int = 0,
+                     stop_pos: Optional[int] = None) -> Iterator[tuple[int, int, bytes]]:
+        """Replay iterator: yields (pos, type, payload); expands batches into
+        their sub-records (skipping torn batches wholesale)."""
+        seg_size = self.cfg.segment_size
+        pos = max(from_pos, self.first_live_pos)
+        tail = stop_pos if stop_pos is not None else self.tail
+        while pos < tail:
+            if seg_size - pos % seg_size < HEADER_SIZE:
+                pos = (pos // seg_size + 1) * seg_size   # tiny tail padding
+                continue
+            hdr = self._pread_raw(pos, HEADER_SIZE)
+            if len(hdr) < HEADER_SIZE:
+                break
+            rtype, length, crc = _HDR.unpack(hdr)
+            if rtype == T_PAD:
+                pos = (pos // seg_size + 1) * seg_size       # segment jump
+                continue
+            nxt = pos + HEADER_SIZE + length
+            if nxt > (pos // seg_size + 1) * seg_size or nxt > tail:
+                break                                        # torn tail
+            payload = self._pread_raw(pos + HEADER_SIZE, length)
+            if crc32(payload) != crc:
+                pos = nxt                                    # torn payload: skip
+                continue
+            if rtype == T_BATCH:
+                yield from self._iter_batch(pos, payload)
+            else:
+                yield pos, rtype, payload
+            pos = nxt
+
+    def _iter_batch(self, batch_pos: int, body: bytes) -> Iterator[tuple[int, int, bytes]]:
+        subs, off = [], 0
+        while off < len(body):
+            if off + HEADER_SIZE > len(body):
+                return                                       # torn batch: drop
+            rtype, length, crc = _HDR.unpack_from(body, off)
+            payload = body[off + HEADER_SIZE:off + HEADER_SIZE + length]
+            if len(payload) < length or crc32(payload) != crc:
+                return                                       # torn batch: drop
+            subs.append((batch_pos + HEADER_SIZE + off, rtype, payload))
+            off += HEADER_SIZE + length
+        yield from subs
+
+    # -------------------------------------------------- background threads
+    def _mapper_loop(self) -> None:
+        while not self._stop.wait(self.cfg.sync_interval_s):
+            self._mapper_once()
+
+    def _mapper_once(self) -> None:
+        # Pre-allocate the segment after the tail so writers never block on
+        # file creation (the paper's pre-allocated map buffer).
+        if self.cfg.preallocate:
+            nxt = self.tail // self.cfg.segment_size + 1
+            try:
+                self._fd(nxt, create=True)
+            except OSError:
+                pass
+        self._gc_segments()
+
+    def _gc_segments(self) -> None:
+        # Close fds unlinked on a *previous* cycle: in-flight preads holding
+        # an old index/value pointer keep working across the unlink (POSIX),
+        # and the deferred close removes the read-after-close race.
+        graveyard = getattr(self, "_fd_graveyard", [])
+        for fd in graveyard:
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+        self._fd_graveyard: list[int] = []
+
+        first_seg = self.first_live_pos // self.cfg.segment_size
+        with self._fd_lock:
+            dead = [i for i in self._fds if i < first_seg]
+        for i in sorted(dead):
+            with self._fd_lock:
+                fd = self._fds.pop(i, None)
+            if fd is not None:
+                self._fd_graveyard.append(fd)
+            try:
+                os.unlink(self._segment_path(i))
+                self.metrics.add(segments_deleted=1)
+            except FileNotFoundError:
+                pass
+            with self._epoch_lock:
+                self._segment_epochs.pop(i, None)
+
+    def advance_gc_watermark(self, pos: int) -> None:
+        """Files entirely below ``pos`` may be deleted (§4.4, file-granular GC)."""
+        self.first_live_pos = max(self.first_live_pos, pos)
+        if not self.cfg.background:
+            self._gc_segments()
+
+    def _syncer_loop(self) -> None:
+        while not self._stop.wait(self.cfg.sync_interval_s):
+            self._sync_finalized()
+
+    def _sync_finalized(self) -> None:
+        """fsync segments that are finalized (fully below the processed
+        watermark) — the paper's asynchronous durability tier."""
+        final_seg = self.tracker.last_processed // self.cfg.segment_size
+        with self._fd_lock:
+            todo = sorted(s for s in self._dirty_segments if s < final_seg)
+        for s in todo:
+            try:
+                os.fsync(self._fd(s))
+            except (OSError, FileNotFoundError):
+                pass
+            self._dirty_segments.discard(s)
+
+    def flush(self) -> None:
+        """Synchronous durability: fsync every dirty segment (explicit flush
+        for applications needing kernel-crash durability, §3.1)."""
+        with self._fd_lock:
+            todo = sorted(self._dirty_segments)
+        for s in todo:
+            try:
+                os.fsync(self._fd(s))
+                self._dirty_segments.discard(s)
+            except (OSError, FileNotFoundError):
+                pass
+
+    # ----------------------------------------------------------- epochs/gc
+    def segment_epochs(self) -> dict[int, tuple[int, int]]:
+        with self._epoch_lock:
+            return dict(self._segment_epochs)
+
+    def segments_expired_below_epoch(self, epoch: int) -> list[int]:
+        """Whole segments whose max epoch < ``epoch`` — droppable without
+        relocating a single byte (the paper's epoch-based pruning)."""
+        first_seg = self.first_live_pos // self.cfg.segment_size
+        tail_seg = self.tail // self.cfg.segment_size
+        out = []
+        with self._epoch_lock:
+            for seg in range(first_seg, tail_seg):
+                rng = self._segment_epochs.get(seg)
+                if rng is not None and rng[1] < epoch:
+                    out.append(seg)
+                else:
+                    break  # prefix property: stop at first live segment
+        return out
+
+    def close(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5)
+        self.flush()
+        with self._fd_lock:
+            for fd in self._fds.values():
+                os.close(fd)
+            self._fds.clear()
+        for fd in getattr(self, "_fd_graveyard", []):
+            try:
+                os.close(fd)
+            except OSError:
+                pass

@@ -1,0 +1,262 @@
+"""Logical → physical sharding rules (DP / TP / EP / SP).
+
+Parameters are matched by leaf-path suffix; every rule validates
+divisibility against the mesh and falls back to replication when a dim
+does not divide (e.g. phi3-medium's 10 KV heads on a 16-way model axis:
+we shard head_dim instead — the "shard kv_heads if divisible, else
+head_dim, else replicate" rule from DESIGN §5).
+
+Activations get with_sharding_constraint via ``batch_spec`` helpers.
+The same rule tree shards the optimizer moments (identical shapes).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(mesh: Mesh, dim: int, axes) -> bool:
+    n = _axis_size(mesh, axes)
+    return n > 1 and dim % n == 0
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# Each rule: (path regex, [axis-candidates per dim]).  Axis candidates are
+# tried right-to-left per dim priority; None = replicate.  "DP" expands to
+# the mesh's data axes, "MP" to the model axis.
+_PARAM_RULES = [
+    # embeddings / heads (vocab-parallel)
+    (r"embed$",                 [("MP",), (None,)]),
+    (r"lm_head$",               [(None,), ("MP",)]),
+    # attention (stacked layer dim first when present)
+    (r"(attn|xattn)/w[qkv]$",   [(None,), ("MP",)]),
+    (r"(attn|xattn)/wo$",       [("MP",), (None,)]),
+    (r"wq_a$",                  [(None,), (None,)]),
+    (r"wq_b$",                  [(None,), ("MP",)]),
+    (r"wkv_a$",                 [(None,), (None,)]),
+    (r"wkv_b$",                 [(None,), ("MP",)]),
+    # dense MLP (column-parallel up, row-parallel down)
+    (r"mlp/w_(gate|up)$",       [(None,), ("MP",)]),
+    (r"mlp/w_down$",            [("MP",), (None,)]),
+    # MoE: experts over the model axis (EP)
+    (r"moe/we_(gate|up|down)$", [("MP",), (None,), (None,)]),
+    (r"moe/router$",            [(None,), (None,)]),
+    (r"moe/ws_(gate|up)$",      [(None,), ("MP",)]),
+    (r"moe/ws_down$",           [("MP",), (None,)]),
+    # mamba2
+    (r"ssm/in_(z|x|dt)$",       [(None,), ("MP",)]),
+    (r"ssm/in_bc$",             [(None,), (None,)]),
+    (r"ssm/conv_x_[wb]$",       [(None,), ("MP",)] ),
+    (r"ssm/conv_bc_[wb]$",      [(None,), (None,)]),
+    (r"ssm/out_proj$",          [("MP",), (None,)]),
+    (r"ssm/(A_log|dt_bias|D)$", [("MP",)]),
+    (r"ssm/norm$",              [("MP",)]),
+    # griffin RG-LRU
+    (r"rec/w_(gate_in|rec_in)$", [(None,), ("MP",)]),
+    (r"rec/conv_[wb]$",         [(None,), ("MP",)]),
+    (r"rec/w_[ri]$",            [(None,), ("MP",)]),
+    (r"rec/(b_r|b_i|lam)$",     [("MP",)]),
+    (r"rec/w_out$",             [("MP",), (None,)]),
+    # MTP
+    (r"mtp/proj$",              [(None,), ("MP",)]),
+    (r"frontend_proj$",         [(None,), (None,)]),
+]
+
+
+def _spec_for_path(path: str, shape: tuple, mesh: Mesh) -> P:
+    for pat, dim_rules in _PARAM_RULES:
+        if re.search(pat, path):
+            # stacked-layer / stacked-group leading dims are never sharded
+            extra = len(shape) - len(dim_rules)
+            spec = [None] * extra
+            for dim, cands in zip(shape[extra:], dim_rules):
+                chosen = None
+                for cand in cands:
+                    if cand is None:
+                        continue
+                    axes = ("model",) if cand == "MP" else data_axes(mesh)
+                    if _fits(mesh, dim, axes):
+                        chosen = axes[0] if len(axes) == 1 else axes
+                        break
+                spec.append(chosen)
+            return P(*spec)
+    return P()                                   # norms, scalars: replicate
+
+
+def _fsdp_spec_for_path(path: str, shape: tuple, mesh: Mesh) -> P:
+    """FSDP / ZeRO-3 sharding: every weight matrix shards one large dim over
+    ALL axes ("data"+"model" ⇒ 256-way); XLA all-gathers the layer's weights
+    just-in-time per use and reduce-scatters its gradients.  Activations run
+    pure-DP (no TP collectives).  MoE keeps experts on "model" (EP) and
+    shards d_model over the remaining axes (§Perf hillclimb #2)."""
+    all_axes = tuple(mesh.axis_names)            # ("pod","data","model")…
+    dp = data_axes(mesh)
+    if re.search(r"moe/we_(gate|up|down)$", path):
+        # E → model (EP); the *output* dim → data.  Sharding the contracting
+        # dim instead makes GSPMD gather full expert activations (the same
+        # failure mode as §Perf A1, measured again in B2: 4.4 TiB of expert
+        # weight/activation gathers).
+        spec = [None] * (len(shape) - 3)
+        e, a, b = shape[-3:]
+        s_e = "model" if _fits(mesh, e, ("model",)) else None
+        s_b = (dp if len(dp) > 1 else dp[0]) if _fits(mesh, b, dp) else None
+        spec += [s_e, None, s_b]
+        return P(*spec)
+    if len(shape) == 0:
+        return P()
+    # Stacked-layer leading dim stays unsharded.  Prefer the LAST (output)
+    # dim: sharding a matmul's contracting dim makes GSPMD compute weight
+    # grads by all-gathering full-batch fp32 activations (measured: 16 GiB
+    # per layer per traversal — §Perf iteration 1, refuted hypothesis).
+    # Output-dim sharding keeps grads local + reduce-scattered.
+    lead = 1 if len(shape) >= 3 else 0
+    dims = list(range(lead, len(shape)))
+    if not dims:
+        return P()
+    for axes in (all_axes, dp, ("model",)):
+        for d in sorted(dims, key=lambda i: -i):
+            if _fits(mesh, shape[d], axes):
+                spec = [None] * len(shape)
+                spec[d] = axes if len(axes) > 1 else axes[0]
+                return P(*spec)
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params_tree, mesh: Mesh, mode: str = "tp"):
+    """PartitionSpec pytree for a parameter (or abstract-shape) pytree.
+    mode: "tp" (Megatron tensor parallel, baseline) | "fsdp" (ZeRO-3)."""
+    fn = _fsdp_spec_for_path if mode == "fsdp" else _spec_for_path
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(_path_str(path), leaf.shape, mesh),
+        params_tree)
+
+
+def opt_specs(opt_tree, param_spec_tree):
+    """Optimizer moments shard like their parameters."""
+    return {
+        "m": param_spec_tree,
+        "v": param_spec_tree,
+        "step": P(),
+    }
+
+
+# ------------------------------------------------------------- activations
+def batch_spec(mesh: Mesh, shape: tuple, batch_dim: int = 0,
+               extra: Optional[dict] = None, mode: str = "tp") -> P:
+    """Shard dim ``batch_dim`` over the data axes (tp) or ALL axes (fsdp:
+    pure-DP compute, every chip gets its own batch slice)."""
+    dp = tuple(mesh.axis_names) if mode == "fsdp" else data_axes(mesh)
+    spec = [None] * len(shape)
+    if _fits(mesh, shape[batch_dim], dp):
+        spec[batch_dim] = dp if len(dp) > 1 else dp[0]
+    elif mode == "fsdp" and _fits(mesh, shape[batch_dim], data_axes(mesh)):
+        d2 = data_axes(mesh)
+        spec[batch_dim] = d2 if len(d2) > 1 else d2[0]
+    if extra:
+        for d, axes in extra.items():
+            if _fits(mesh, shape[d], axes):
+                spec[d] = axes if isinstance(axes, str) else \
+                    (axes if len(axes) > 1 else axes[0])
+    return P(*spec)
+
+
+def kv_head_axis_dims(kv_heads: int, entry_dim: int, mesh: Mesh):
+    """DESIGN §5 rule: shard kv_heads over model if divisible, else the
+    packed entry dim, else replicate.  Returns (kv_spec_axis, entry_axis)."""
+    if _fits(mesh, kv_heads, ("model",)):
+        return "model", None
+    if _fits(mesh, entry_dim, ("model",)):
+        return None, "model"
+    return None, None
+
+
+def cache_specs_tree(cache_tree, mesh: Mesh):
+    """PartitionSpecs for a KV-WAL / state cache pytree (by leaf name)."""
+    dp = data_axes(mesh)
+
+    def spec(path, leaf):
+        name = _path_str(path)
+        sh = leaf.shape
+        if ("arena_k" in name or "arena_v" in name) and len(sh) >= 5:
+            # (L?, B, nb, blk, KH, dim)
+            off = len(sh) - 5                    # tail arenas have no L dim
+            s = [None] * len(sh)
+            if _fits(mesh, sh[off], dp):
+                s[off] = dp if len(dp) > 1 else dp[0]
+            kh_ax, ed_ax = kv_head_axis_dims(sh[off + 3], sh[off + 4], mesh)
+            s[off + 3] = kh_ax
+            s[off + 4] = ed_ax
+            return P(*s)
+        if name.endswith(("cross_k", "cross_v")) and len(sh) == 5:
+            s = [None, None, None, None, None]
+            if _fits(mesh, sh[1], dp):
+                s[1] = dp if len(dp) > 1 else dp[0]
+            kh_ax, ed_ax = kv_head_axis_dims(sh[3], sh[4], mesh)
+            s[3], s[4] = kh_ax, ed_ax
+            return P(*s)
+        if name.endswith("state") and len(sh) == 5:   # ssm (L,B,h,p,n)
+            s = [None] * 5
+            if _fits(mesh, sh[1], dp):
+                s[1] = dp if len(dp) > 1 else dp[0]
+            if _fits(mesh, sh[2], ("model",)):
+                s[2] = "model"
+            return P(*s)
+        if ("conv" in name or "lru" in name) and len(sh) >= 3:
+            s = [None] * len(sh)
+            bdim = len(sh) - 3 if "conv" in name else len(sh) - 2
+            if _fits(mesh, sh[bdim], dp):
+                s[bdim] = dp if len(dp) > 1 else dp[0]
+            if _fits(mesh, sh[-1], ("model",)):
+                s[-1] = "model"
+            return P(*s)
+        if name.endswith(("seq_lens", "first_live", "table")):
+            return P()
+        # fallback: shard the most plausible batch dim
+        return batch_spec(mesh, sh, 0 if len(sh) <= 2 else 1)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def input_specs_tree(specs: dict, mesh: Mesh, mode: str = "tp"):
+    """Shardings for dry-run/step inputs keyed by input name."""
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            out[k] = cache_specs_tree(v, mesh)
+        elif k == "mrope_positions":
+            out[k] = batch_spec(mesh, v.shape, batch_dim=1, mode=mode)
+        else:
+            out[k] = batch_spec(mesh, v.shape, batch_dim=0, mode=mode)
+    return out
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

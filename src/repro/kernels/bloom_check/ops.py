@@ -1,0 +1,17 @@
+"""jit'd wrapper for bloom_check."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import bloom_check
+from .ref import bloom_check_ref
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl", "interpret"))
+def might_contain(h1, h2, bits, *, k: int = 7, impl: str = "pallas",
+                  interpret: bool = True):
+    if impl == "pallas":
+        return bloom_check(h1, h2, bits, k=k, interpret=interpret)
+    return bloom_check_ref(h1, h2, bits, k=k)

@@ -1,0 +1,28 @@
+"""jit'd wrapper: resolve WAL positions for hash keys via the optimistic
+index, falling back to the oracle for unresolved (budget-exhausted) queries."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import optimistic_lookup
+from .ref import optimistic_lookup_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "max_iters", "interpret"))
+def lookup_positions(queries, keys, positions, *, window: int = 512,
+                     max_iters: int = 4, interpret: bool = True):
+    """queries (Q,) u32; keys (N,) u32 sorted; positions (N,) — the WAL
+    offsets.  Returns (pos (Q,), found (Q,) bool)."""
+    idx, found, iters = optimistic_lookup(queries, keys, window=window,
+                                          max_iters=max_iters,
+                                          interpret=interpret)
+    unresolved = idx < 0
+    ref_idx, ref_found = optimistic_lookup_ref(queries, keys)
+    idx = jnp.where(unresolved, ref_idx, idx)
+    found = jnp.where(unresolved, ref_found, found)
+    safe = jnp.clip(idx, 0, keys.shape[0] - 1)
+    return jnp.where(found, positions[safe], 0), found

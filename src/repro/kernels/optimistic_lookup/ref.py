@@ -1,0 +1,12 @@
+"""Oracle: exact searchsorted over the full key array."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def optimistic_lookup_ref(queries, keys):
+    idx = jnp.searchsorted(keys, queries).astype(jnp.int32)
+    in_range = idx < keys.shape[0]
+    found = in_range & (jnp.where(in_range, keys[jnp.minimum(
+        idx, keys.shape[0] - 1)], 0) == queries)
+    return idx, found

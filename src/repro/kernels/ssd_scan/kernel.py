@@ -1,0 +1,123 @@
+"""ssd_scan — fused Mamba-2 SSD chunk scan (arXiv:2405.21060) on TPU.
+
+The roofline table shows mamba2 cells are memory-bound: the unfused SSD
+materializes per-chunk decay matrices, states and both output terms in HBM.
+This kernel fuses one chunk's full computation — within-chunk
+(attention-like) term, chunk-state construction, and the cross-chunk
+recurrence — into VMEM, carrying the running state in scratch across the
+(sequential) chunk grid dimension, exactly like tide_attention carries its
+softmax accumulator.
+
+Grid: (batch, head-block, chunk).  Per step, VMEM holds
+x(c,HB,p), dt(c,HB), B/C(c,n), the (HB,c,c) decay mask and the (HB,p,n)
+carried state.  Outputs: y tiles and (at the last chunk) the final state —
+HBM traffic is exactly inputs-once + outputs-once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,
+            y_ref, state_ref,
+            carry_ref,
+            *, n_chunks: int, chunk: int):
+    z = pl.program_id(2)
+
+    @pl.when(z == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (c, HB, p)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (c, HB)
+    Bm = b_ref[0, 0].astype(jnp.float32)         # (c, n)
+    Cm = c_ref[0, 0].astype(jnp.float32)         # (c, n)
+    A = a_ref[...].astype(jnp.float32)           # (HB,)
+
+    dA = dt * A[None, :]                         # (c, HB)
+    dA_cs = jnp.cumsum(dA, axis=0)               # (c, HB)
+
+    # within-chunk decay mask L[h, i, j] = exp(sum_{j<t<=i} dA[t,h])
+    seg = dA_cs.T[:, :, None] - dA_cs.T[:, None, :]        # (HB, c, c)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where((ii >= jj)[None], jnp.exp(seg), 0.0)     # (HB, c, c)
+
+    att = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (c, c)
+    xdt = x * dt[:, :, None]                               # (c, HB, p)
+    att_h = att[None] * L                                  # (HB, c, c)
+    # y_diag[c,HB,p] = sum_j att_h[h,i,j] · xdt[j,h,p]
+    y_diag = jnp.einsum("hij,jhp->ihp", att_h, xdt,
+                        preferred_element_type=jnp.float32)
+
+    # carried cross-chunk term: y_off = (C · state^T) · decay_from_start
+    state = carry_ref[...]                                 # (HB, p, n)
+    decay_start = jnp.exp(dA_cs)                           # (c, HB)
+    y_off = jnp.einsum("cn,hpn->chp", Cm, state,
+                       preferred_element_type=jnp.float32) \
+        * decay_start[:, :, None]
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: state' = chunk_decay·state + Σ_c decay_to_end·B⊗xdt
+    decay_end = jnp.exp(dA_cs[-1:, :] - dA_cs)             # (c, HB)
+    new_contrib = jnp.einsum("cn,chp,ch->hpn", Bm, xdt, decay_end,
+                             preferred_element_type=jnp.float32)
+    chunk_decay = jnp.exp(dA_cs[-1])                       # (HB,)
+    carry_ref[...] = state * chunk_decay[:, None, None] + new_contrib
+
+    @pl.when(z == n_chunks - 1)
+    def _final():
+        state_ref[0] = carry_ref[...].astype(state_ref.dtype)
+
+
+def ssd_scan_pallas(x, dt, A, Bm, Cm, *, chunk: int = 256,
+                    head_block: int = 4, interpret: bool = False):
+    """x (b,l,h,p); dt (b,l,h) post-softplus; A (h,) negative;
+    Bm, Cm (b,l,n).  l must divide by ``chunk``.
+    → (y (b,l,h,p) fp32-accumulated, final_state (b,h,p,n) f32)."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0, "pad sequences to a chunk multiple (see ops.py)"
+    nc = l // chunk
+    hb = min(head_block, h)
+    assert h % hb == 0
+    xr = x.reshape(b, nc, chunk, h, p)
+    dtr = dt.reshape(b, nc, chunk, h)
+    Br = Bm.reshape(b, nc, chunk, n)
+    Cr = Cm.reshape(b, nc, chunk, n)
+
+    grid = (b, h // hb, nc)
+    kernel = functools.partial(_kernel, n_chunks=nc, chunk=chunk)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hb, p),
+                         lambda bi, hi, zi: (bi, zi, 0, hi, 0)),
+            pl.BlockSpec((1, 1, chunk, hb),
+                         lambda bi, hi, zi: (bi, zi, 0, hi)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda bi, hi, zi: (bi, zi, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda bi, hi, zi: (bi, zi, 0, 0)),
+            pl.BlockSpec((hb,), lambda bi, hi, zi: (hi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hb, p),
+                         lambda bi, hi, zi: (bi, zi, 0, hi, 0)),
+            pl.BlockSpec((1, hb, p, n), lambda bi, hi, zi: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, chunk, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hb, p, n), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, Br, Cr, A)
+    return y.reshape(b, l, h, p), state

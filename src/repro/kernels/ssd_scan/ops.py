@@ -1,0 +1,30 @@
+"""jit'd wrapper for the fused SSD chunk scan (handles chunk padding)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_pallas
+from .ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256, impl: str = "pallas",
+        interpret: bool = True):
+    """Pads to a chunk multiple (state-neutral: dt=0 ⇒ decay 1, zero
+    contribution), runs the fused kernel, trims."""
+    if impl == "ref":
+        return ssd_scan_ref(x, dt, A, Bm, Cm, chunk)
+    b, l, h, p = x.shape
+    c = min(chunk, l)
+    pad = (-l) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=c,
+                               interpret=interpret)
+    return y[:, :l], state

@@ -1,0 +1,4 @@
+"""Oracle: the model stack's chunked-SSD implementation (pure jnp)."""
+from __future__ import annotations
+
+from repro.models.ssm import ssd_scan as ssd_scan_ref  # noqa: F401

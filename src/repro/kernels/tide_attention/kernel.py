@@ -1,0 +1,123 @@
+"""tide_attention — decode attention reading K/V *through* the KV-WAL slot
+table (the Tidehunter read path, §3.2, on the MXU).
+
+One grid step = (sequence, kv-head, block): the physical block id comes from
+the scalar-prefetched slot table (the Large Table analogue), the (block_size
+× head_dim) K/V tiles are staged into VMEM by the BlockSpec machinery, and
+an online-softmax (flash-decoding) accumulator carries across the block
+axis.  Dead positions — beyond seq_len or below the epoch-pruned
+``first_live`` watermark, or outside a sliding window — are masked.
+
+Design notes (TPU adaptation of the paper's 32 KB SSD read window):
+- block_size defaults to 128 slots → K tile (128, head_dim) is exactly one
+  MXU-aligned VMEM tile; reading one block costs the same as reading one
+  slot, mirroring the SSD batch-read property the optimistic index exploits.
+- The gather indirection never materializes a contiguous KV copy in HBM
+  (the reference path must); values stay where they were written — C1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, lens_ref, live_ref,      # scalar-prefetch
+            q_ref, k_ref, v_ref,                # VMEM tiles
+            o_ref,                              # output tile
+            m_ref, l_ref, acc_ref,              # scratch
+            *, block_size: int, n_blocks: int, window: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = lens_ref[b]
+    first_live = live_ref[b]
+    block_start = j * block_size
+
+    @pl.when(block_start < seq_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # (G, dk)
+        k = k_ref[0, 0, :, 0, :].astype(jnp.float32)        # (blk, dk)
+        v = v_ref[0, 0, :, 0, :].astype(jnp.float32)        # (blk, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # (G, blk)
+        pos = block_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, dimension=1)
+        mask = (pos < seq_len) & (pos >= first_live)
+        if window > 0:
+            mask = mask & (pos > seq_len - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_old = m_ref[...]                                  # (G, 1)
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def tide_attention(q: jax.Array, arena_k: jax.Array, arena_v: jax.Array,
+                   table: jax.Array, seq_lens: jax.Array,
+                   first_live: jax.Array, *, window: int = 0,
+                   scale: float | None = None,
+                   interpret: bool = False) -> jax.Array:
+    """q (B,H,dk); arena_k (B,NB,blk,KH,dk); arena_v (B,NB,blk,KH,dv);
+    table (B,NB) i32; seq_lens/first_live (B,) i32 → (B,H,dv).
+
+    ``seq_lens`` counts valid slots (the new token's entry must already be
+    appended — write-once before read, as in the paper's write flow)."""
+    B, H, dk = q.shape
+    _, NB, blk, KH, _ = arena_k.shape
+    dv = arena_v.shape[-1]
+    G = H // KH
+    scale = dk ** -0.5 if scale is None else scale
+
+    grid = (B, KH, NB)
+    kernel = functools.partial(
+        _kernel, block_size=blk, n_blocks=NB, window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, G, dk),
+                             lambda b, kh, j, *refs: (b, kh, 0)),
+                pl.BlockSpec((1, 1, blk, 1, dk),
+                             lambda b, kh, j, tbl, lens, live:
+                             (b, tbl[b, j], 0, kh, 0)),
+                pl.BlockSpec((1, 1, blk, 1, dv),
+                             lambda b, kh, j, tbl, lens, live:
+                             (b, tbl[b, j], 0, kh, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, G, dv),
+                                   lambda b, kh, j, *refs: (b, kh, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, dv), q.dtype),
+        interpret=interpret,
+    )(table, seq_lens, first_live, q, arena_k, arena_v)

@@ -1,0 +1,22 @@
+"""jit'd public wrapper for tide_attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import tide_attention
+from .ref import tide_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl", "interpret"))
+def decode_attention(q, arena_k, arena_v, table, seq_lens, first_live,
+                     *, window: int = 0, impl: str = "pallas",
+                     interpret: bool = True):
+    """Decode attention through the KV-WAL.  ``impl='pallas'`` runs the TPU
+    kernel (interpret=True emulates on CPU); ``impl='ref'`` is the oracle."""
+    if impl == "pallas":
+        return tide_attention(q, arena_k, arena_v, table, seq_lens,
+                              first_live, window=window, interpret=interpret)
+    return tide_attention_ref(q, arena_k, arena_v, table, seq_lens,
+                              first_live, window=window)

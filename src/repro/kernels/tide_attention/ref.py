@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for tide_attention (gathers the arena, dense softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tide_attention_ref(q, arena_k, arena_v, table, seq_lens, first_live,
+                       *, window: int = 0, scale=None):
+    B, H, dk = q.shape
+    _, NB, blk, KH, _ = arena_k.shape
+    dv = arena_v.shape[-1]
+    G = H // KH
+    scale = dk ** -0.5 if scale is None else scale
+
+    bidx = jnp.arange(B)[:, None]
+    k = arena_k[bidx, table].reshape(B, NB * blk, KH, dk)
+    v = arena_v[bidx, table].reshape(B, NB * blk, KH, dv)
+    qg = q.reshape(B, KH, G, dk).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(NB * blk)[None, :]
+    mask = (pos < seq_lens[:, None]) & (pos >= first_live[:, None])
+    if window > 0:
+        mask = mask & (pos > (seq_lens[:, None] - 1 - window))
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, dv).astype(q.dtype)

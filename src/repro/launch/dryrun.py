@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede every other import: jax locks the device
+# count at first initialization, and the production meshes need 512
+# placeholder devices (2 pods × 16 × 16).
+
+import argparse                                    # noqa: E402
+import dataclasses                                 # noqa: E402
+import json                                        # noqa: E402
+import time                                        # noqa: E402
+import traceback                                   # noqa: E402
+
+import jax                                         # noqa: E402
+import jax.numpy as jnp                            # noqa: E402
+import numpy as np                                 # noqa: E402
+
+from repro.configs.registry import (ARCH_IDS, SHAPES, get_config,  # noqa: E402
+                                    input_specs, runnable)
+from repro.distributed import sharding             # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.roofline import analysis as roofline    # noqa: E402
+from repro.roofline import hw                      # noqa: E402
+from repro.roofline.jaxpr_cost import jaxpr_cost   # noqa: E402
+from repro.training.optimizer import AdamWConfig   # noqa: E402
+from repro.training.step import (abstract_train_state,  # noqa: E402
+                                 make_decode_step, make_prefill_step,
+                                 make_train_step)
+
+# Memory-constrained giants drop to bf16 optimizer moments (DESIGN §9).
+_BF16_MOMENTS = {"deepseek-v3-671b", "qwen2-vl-72b"}
+
+
+def chips_of(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256
+
+
+def _opt_for(arch: str) -> AdamWConfig:
+    return AdamWConfig(
+        moment_dtype="bfloat16" if arch in _BF16_MOMENTS else "float32")
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None, sharding_mode: str = "tp"):
+    """Lower + compile one (arch × shape × mesh) cell.  Returns artifacts."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if shape.kind != "train":
+        # Serving uses bf16 weights.
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    if shape.kind == "prefill" or (shape.kind == "train"
+                                   and shape.seq_len > 8192):
+        cfg = dataclasses.replace(cfg, attn_chunk_q=1024)
+    for k, v in (overrides or {}).items():
+        if isinstance(v, list):
+            v = tuple(v)
+        cfg = dataclasses.replace(cfg, **{k: v})
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    specs = input_specs(cfg, shape)
+    in_specs = sharding.named(
+        sharding.input_specs_tree(specs, mesh, mode=sharding_mode), mesh)
+    opt = _opt_for(arch)
+    params_abs, opt_abs = abstract_train_state(cfg, opt)
+    pspec = sharding.named(
+        sharding.param_specs(params_abs, mesh, mode=sharding_mode), mesh)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(cfg, opt)
+            ospec = {"m": pspec, "v": pspec,
+                     "step": sharding.named(
+                         jax.sharding.PartitionSpec(), mesh)}
+            lowered = jax.jit(
+                step,
+                in_shardings=(pspec, ospec, in_specs),
+                out_shardings=(pspec, ospec, None),
+                donate_argnums=(0, 1),
+            ).lower(params_abs, opt_abs, specs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, max_seq=shape.seq_len + 256)
+            from repro.models import serve as serve_mod
+            cache_abs = serve_mod.cache_spec(cfg, specs["tokens"].shape[0],
+                                             shape.seq_len + 256)
+            cspec = sharding.named(sharding.cache_specs_tree(cache_abs, mesh),
+                                   mesh)
+            lowered = jax.jit(
+                step, in_shardings=(pspec, in_specs),
+                out_shardings=(None, cspec),
+            ).lower(params_abs, specs)
+        else:  # decode
+            step = make_decode_step(cfg)
+            cspec = in_specs["cache"]
+            args = [params_abs, specs["cache"], specs["tokens"]]
+            in_sh = [pspec, cspec, in_specs["tokens"]]
+            kwargs = {}
+            if "mrope_positions" in specs:
+                args.append(specs["mrope_positions"])
+                in_sh.append(in_specs["mrope_positions"])
+            lowered = jax.jit(
+                step, in_shardings=tuple(in_sh),
+                out_shardings=(None, cspec), donate_argnums=(1,),
+            ).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+    except Exception as e:                         # pragma: no cover
+        mem["error"] = str(e)
+
+    cost = compiled.cost_analysis() or {}
+    # XLA's cost_analysis visits while bodies once (layer scans undercounted
+    # ~n_layers×); the jaxpr walker recurses with trip counts — see
+    # roofline/jaxpr_cost.py.  Counts are global; divide by chips.
+    if shape.kind == "train":
+        jc = jaxpr_cost(step, params_abs, opt_abs, specs)
+    elif shape.kind == "prefill":
+        jc = jaxpr_cost(step, params_abs, specs)
+    else:
+        jc = jaxpr_cost(step, *args)
+    flops = jc.flops / chips_of(multi_pod)
+    bytes_acc = jc.bytes / chips_of(multi_pod)
+    hlo = compiled.as_text()
+    coll = roofline.parse_collectives(hlo)
+
+    n_tokens = shape.seq_len * shape.global_batch if shape.kind != "decode" \
+        else shape.global_batch
+    mf = roofline.model_flops(cfg, n_tokens, shape.kind)
+    chips = 512 if multi_pod else 256
+    rf = roofline.Roofline(
+        arch=arch, shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16", chips=chips,
+        flops_per_device=flops, bytes_per_device=bytes_acc,
+        collective_bytes=float(coll.total_bytes),
+        peak_memory_per_device=float(
+            mem.get("argument_size_in_bytes", 0)
+            + mem.get("temp_size_in_bytes", 0)
+            - mem.get("alias_size_in_bytes", 0)),
+        model_flops=mf,
+        collectives={"bytes": coll.bytes_by_kind,
+                     "count": coll.count_by_kind},
+    )
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem,
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "roofline": rf.to_dict(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run")
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides as key=value (perf experiments)")
+    ap.add_argument("--sharding-mode", default="tp", choices=["tp", "fsdp"])
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    def record(entry):
+        results[:] = [r for r in results
+                      if not (r["arch"] == entry["arch"]
+                              and r["shape"] == entry["shape"]
+                              and r["mesh"] == entry["mesh"])]
+        results.append(entry)
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    for arch in archs:
+        for shape_name in shapes:
+            ok, reason = runnable(arch, shape_name)
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                tag = f"{arch} × {shape_name} × {mesh_name}"
+                if not ok:
+                    print(f"[dryrun] {tag}: {reason}")
+                    record({"arch": arch, "shape": shape_name,
+                            "mesh": mesh_name, "status": reason})
+                    continue
+                try:
+                    t0 = time.time()
+                    entry = lower_cell(arch, shape_name, multi, overrides,
+                                       sharding_mode=args.sharding_mode)
+                    rf = entry["roofline"]
+                    print(f"[dryrun] {tag}: OK in {time.time()-t0:.0f}s — "
+                          f"flops/dev={rf['flops_per_device']:.3e} "
+                          f"coll={rf['collective_bytes']:.3e}B "
+                          f"bottleneck={rf['bottleneck']} "
+                          f"mem/dev={rf['peak_memory_per_device']/2**30:.2f}GiB")
+                    record(entry)
+                except Exception as e:
+                    traceback.print_exc()
+                    print(f"[dryrun] {tag}: FAIL {e}")
+                    record({"arch": arch, "shape": shape_name,
+                            "mesh": mesh_name, "status": f"FAIL: {e}"})
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Target hardware: TPU v5e pods — 16×16 = 256 chips per pod; multi-pod adds a
+leading "pod" axis (data parallel across DCN).  Defined as functions so that
+importing this module never touches jax device state (the dry-run must set
+XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over however many (real or forced) host devices exist —
+    used by tests and the CPU examples."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch: ('pod','data') on multi-pod meshes."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,60 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Wires a registry config (full or smoke), the mesh, sharded step functions,
+tidestore checkpointing and the restartable loop.  On this CPU container
+use ``--smoke`` (full configs need the pod).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.pipeline import synthetic_batch
+from repro.training.loop import LoopConfig, run
+from repro.training.optimizer import AdamWConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro-train")
+    ap.add_argument("--checkpoint-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1))
+
+    def batch_fn(step):
+        b = synthetic_batch(step, args.batch, args.seq, cfg.vocab)
+        out = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.family == "vlm":
+            out["vision_embed"] = jnp.zeros((args.batch, 4, cfg.d_model),
+                                            cfg.adtype)
+            pos = jnp.broadcast_to(jnp.arange(args.seq)[None],
+                                   (args.batch, args.seq))
+            out["mrope_positions"] = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+        if cfg.family == "encdec":
+            out["frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq, cfg.encoder_dim), cfg.adtype)
+        return out
+
+    summary = run(cfg, opt,
+                  LoopConfig(total_steps=args.steps,
+                             checkpoint_every=args.checkpoint_every),
+                  batch_fn, args.ckpt_dir)
+    print(f"[train] {args.arch}: loss {summary['losses'][0]:.4f} → "
+          f"{summary['final_loss']:.4f} over {args.steps} steps "
+          f"(resumed_from={summary['resumed_from']})")
+
+
+if __name__ == "__main__":
+    main()

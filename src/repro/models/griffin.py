@@ -1,0 +1,83 @@
+"""RecurrentGemma / Griffin blocks (arXiv:2402.19427).
+
+Layer pattern (rec, rec, attn): two RG-LRU recurrent blocks per local-MQA
+attention block.  The RG-LRU is a gated linear recurrence
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t),  a_t = a^(c·r_t)
+computed with an associative scan for train/prefill and an O(1) update for
+decode.  Sub-quadratic in sequence length (the attention is windowed), so
+recurrentgemma runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+from .layers import init_linear
+
+
+def lru_width(cfg: ModelConfig) -> int:
+    return cfg.griffin.lru_width or cfg.d_model
+
+
+def init_recurrent_block(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    w = lru_width(cfg)
+    g = cfg.griffin
+    ks = jax.random.split(key, 7)
+    return {
+        "w_gate_in": init_linear(ks[0], d, w, dtype),    # GELU branch
+        "w_rec_in": init_linear(ks[1], d, w, dtype),     # recurrent branch
+        "conv_w": (jax.random.normal(ks[2], (g.conv_width, w)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_r": init_linear(ks[3], w, w, dtype),          # recurrence gate
+        "b_r": jnp.zeros((w,), jnp.float32),
+        "w_i": init_linear(ks[4], w, w, dtype),          # input gate
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.full((w,), 2.0, jnp.float32),         # Λ (a = σ(Λ))
+        "w_out": init_linear(ks[5], w, d, dtype),
+    }
+
+
+def _rg_lru(params, x: jax.Array, cfg: ModelConfig, state=None):
+    """x (B,L,w) → (y, final_state (B,w)).  Associative scan over L."""
+    c = cfg.griffin.c_constant
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ params["w_r"].astype(jnp.float32) + params["b_r"])
+    i = jax.nn.sigmoid(x32 @ params["w_i"].astype(jnp.float32) + params["b_i"])
+    log_a = -c * r * jax.nn.softplus(params["lam"])[None, None, :]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x32)
+    if x.shape[1] == 1 and state is not None:              # decode: O(1)
+        h = a[:, 0] * state.astype(jnp.float32) + gated[:, 0]
+        return h[:, None].astype(x.dtype), h
+    if state is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * state.astype(jnp.float32))
+
+    def combine(l, r_):
+        (a1, b1), (a2, b2) = l, r_
+        return a1 * a2, b1 * a2 + b2
+
+    A, Bh = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return Bh.astype(x.dtype), Bh[:, -1]
+
+
+def recurrent_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                    conv_state=None, lru_state=None):
+    """Griffin recurrent block.  Returns (y, (new_conv, new_lru))."""
+    g = jax.nn.gelu(x @ params["w_gate_in"].astype(x.dtype))
+    u = x @ params["w_rec_in"].astype(x.dtype)
+    # depthwise causal conv (width 4)
+    K = params["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    conv = sum(full[:, j:j + u.shape[1], :]
+               * params["conv_w"][j][None, None, :].astype(u.dtype)
+               for j in range(K)) + params["conv_b"].astype(u.dtype)
+    new_conv = full[:, -(K - 1):, :]
+    h, new_lru = _rg_lru(params, conv, cfg, lru_state)
+    return (g * h) @ params["w_out"].astype(x.dtype), (new_conv, new_lru)

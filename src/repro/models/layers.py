@@ -1,0 +1,222 @@
+"""Core neural layers (functional style: params are plain dict pytrees).
+
+Conventions:
+- activations run in ``cfg.adtype`` (bf16), reductions/softmax in fp32;
+- params are created in ``cfg.pdtype`` and cast at use;
+- attention supports GQA (without materializing repeated KV heads),
+  qk-norm, sliding windows, cross-attention, query chunking (bounds the
+  score buffer for long sequences), and decode offsets.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, rotary_dim: int, theta: float):
+    """positions (..., S) → cos/sin (..., S, rotary_dim/2) in fp32."""
+    half = rotary_dim // 2
+    inv = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B,S,H,hd) with half-rotation convention; cos/sin (B,S,half)."""
+    half = cos.shape[-1]
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    r1 = x1 * c - x2 * s
+    r2 = x2 * c + x1 * s
+    if x.shape[-1] > 2 * half:
+        return jnp.concatenate([r1, r2, x[..., 2 * half:]], axis=-1)
+    return jnp.concatenate([r1, r2], axis=-1)
+
+
+def mrope_angles(positions: jax.Array, rotary_dim: int, theta: float,
+                 sections: tuple):
+    """Qwen2-VL M-RoPE: positions (3,B,S) — temporal/height/width streams.
+    Frequency slots are partitioned between the three streams."""
+    half = rotary_dim // 2
+    inv = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    sel = np.zeros(half, dtype=np.int32)
+    start = 0
+    for i, sec in enumerate(sections):
+        sel[start:start + sec] = i
+        start += sec
+    # pos_sel (B,S,half): pick the stream per frequency slot
+    pos = positions.astype(jnp.float32)           # (3,B,S)
+    pos_sel = jnp.take(pos, jnp.asarray(sel), axis=0)      # (half,B,S)
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)                 # (B,S,half)
+    ang = pos_sel * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def sinusoidal_embedding(positions: jax.Array, dim: int) -> jax.Array:
+    """Whisper-style absolute sinusoidal embedding, computed on the fly."""
+    half = dim // 2
+    inv = jnp.exp(-np.log(10000.0) * np.arange(half, dtype=np.float32)
+                  / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------- attention
+def _attn_scores_block(q, k, v, mask, scale):
+    """q (B,Sq,KH,G,hd), k (B,Skv,KH,hd), v (B,Skv,KH,vd), mask (B,Sq,Skv)."""
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None, None, :, :], s, jnp.float32(-1e30))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskv->bqkgv", p.astype(v.dtype), v)
+    return o
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, q_offset=0,
+              kv_len: Optional[jax.Array] = None,
+              kv_start: Optional[jax.Array] = None,
+              window: int = 0, chunk_q: int = 0,
+              scale: Optional[float] = None) -> jax.Array:
+    """General multi-query attention.
+
+    q (B,Sq,H,hd); k,v (B,Skv,KH,*).  GQA is computed by grouping query
+    heads (no KV repetition).  Returns (B,Sq,H,vd).
+    """
+    B, Sq, H, hd = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    vd = v.shape[-1]
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, Sq, KH, G, hd)
+    Skv = k.shape[1]
+    kv_pos = jnp.arange(Skv)[None, None, :]                # (1,1,Skv)
+    qoff = jnp.asarray(q_offset)
+    if qoff.ndim == 0:
+        qoff = qoff[None]                                  # (1,) or (B,)
+
+    def mask_for(q_positions):
+        # q_positions (B|1, Sq') → mask (B, Sq', Skv)
+        m = jnp.ones((1, 1, Skv), dtype=bool)
+        if causal:
+            m = m & (kv_pos <= q_positions[..., None])
+        if window > 0:
+            m = m & (kv_pos > q_positions[..., None] - window)
+        if kv_len is not None:
+            m = m & (kv_pos < kv_len[:, None, None])
+        if kv_start is not None:
+            # Epoch-pruned KV-WAL segments: positions below the per-sequence
+            # first_live watermark are dead (repro.core.kvwal).
+            m = m & (kv_pos >= kv_start[:, None, None])
+        return jnp.broadcast_to(m, (B, m.shape[1], Skv))
+
+    if chunk_q and Sq > chunk_q and Sq % chunk_q == 0:
+        n = Sq // chunk_q
+        qc = qg.reshape(B, n, chunk_q, KH, G, hd)
+
+        def body(i):
+            qp = qoff[:, None] + i * chunk_q + jnp.arange(chunk_q)[None]
+            return _attn_scores_block(qc[:, i], k, v, mask_for(qp), scale)
+
+        o = jax.lax.map(body, jnp.arange(n))               # (n,B,chunk,KH,G,vd)
+        o = jnp.moveaxis(o, 0, 1).reshape(B, Sq, KH, G, vd)
+    else:
+        q_positions = qoff[:, None] + jnp.arange(Sq)[None]
+        o = _attn_scores_block(qg, k, v, mask_for(q_positions), scale)
+    return o.reshape(B, Sq, H, vd)
+
+
+def gqa_block(params: dict, x: jax.Array, cfg, *, cos=None, sin=None,
+              k_ext=None, v_ext=None, q_offset=0, kv_len=None, kv_start=None,
+              window: int = 0, n_heads=None, n_kv=None, head_dim=None,
+              chunk_q=None) -> jax.Array:
+    """Standard (G)QA projection + attention + output.
+
+    If ``k_ext``/``v_ext`` are given they REPLACE the self-computed K/V
+    (decode against a KV cache, or cross-attention)."""
+    H = n_heads or cfg.n_heads
+    KH = n_kv or cfg.n_kv_heads
+    hd = head_dim or cfg.hd
+    B, S, _ = x.shape
+    q = (x @ params["wq"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = v = None
+    if "wk" in params:
+        k = (x @ params["wk"].astype(x.dtype)).reshape(B, S, KH, hd)
+        v = (x @ params["wv"].astype(x.dtype)).reshape(B, S, KH, hd)
+    if "q_norm" in params:                                  # qwen3 qk-norm
+        q = rms_norm(params["q_norm"], q, cfg.norm_eps)
+        if k is not None:
+            k = rms_norm(params["k_norm"], k, cfg.norm_eps)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        if k is not None:
+            k = apply_rope(k, cos, sin)
+    new_kv = (k, v)
+    if k_ext is not None:
+        k, v = k_ext, v_ext
+    o = attention(q, k, v, causal=cfg.causal and k_ext is None,
+                  q_offset=q_offset, kv_len=kv_len, kv_start=kv_start,
+                  window=window,
+                  chunk_q=chunk_q if chunk_q is not None else cfg.attn_chunk_q)
+    o = o.reshape(B, S, H * o.shape[-1])
+    return o @ params["wo"].astype(x.dtype), new_kv
+
+
+def init_gqa(key, cfg, dtype, n_heads=None, n_kv=None, head_dim=None,
+             cross: bool = False, qk_norm=None) -> dict:
+    H = n_heads or cfg.n_heads
+    KH = n_kv or cfg.n_kv_heads
+    hd = head_dim or cfg.hd
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {"wq": init_linear(ks[0], d, H * hd, dtype),
+         "wo": init_linear(ks[3], H * hd, d, dtype)}
+    if not cross:
+        p["wk"] = init_linear(ks[1], d, KH * hd, dtype)
+        p["wv"] = init_linear(ks[2], d, KH * hd, dtype)
+    else:
+        # cross-attention K/V projections read encoder states
+        p["wk"] = init_linear(ks[1], cfg.encoder_dim or d, KH * hd, dtype)
+        p["wv"] = init_linear(ks[2], cfg.encoder_dim or d, KH * hd, dtype)
+    use_qk = cfg.qk_norm if qk_norm is None else qk_norm
+    if use_qk:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+# --------------------------------------------------------------------- MLPs
+def mlp_block(params: dict, x: jax.Array, act: str) -> jax.Array:
+    if act in ("silu", "geglu"):                    # SwiGLU / gated-GELU
+        fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+        g = fn(x @ params["w_gate"].astype(x.dtype))
+        u = x @ params["w_up"].astype(x.dtype)
+        return (g * u) @ params["w_down"].astype(x.dtype)
+    h = jax.nn.gelu(x @ params["w_up"].astype(x.dtype))
+    return h @ params["w_down"].astype(x.dtype)
+
+
+def init_mlp(key, d: int, ff: int, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": init_linear(ks[1], d, ff, dtype),
+         "w_down": init_linear(ks[2], ff, d, dtype)}
+    if act in ("silu", "geglu"):
+        p["w_gate"] = init_linear(ks[0], d, ff, dtype)
+    return p

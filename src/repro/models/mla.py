@@ -1,0 +1,121 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+K/V are compressed into a per-token latent c_kv (kv_lora_rank) plus a shared
+RoPE key (qk_rope_head_dim).  The decode path uses the *absorbed* form:
+query heads are projected into latent space so attention contracts against
+the cached latents directly — the KV cache stores only
+(kv_lora_rank + rope) = 576 dims/token.  This is the paper-ideal "large
+value" workload for the Tidehunter KV-WAL: one compressed latent vector per
+token, written once, never moved.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import MLAConfig, ModelConfig
+from .layers import apply_rope, attention, init_linear, rms_norm
+
+
+def init_mla(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": init_linear(ks[0], d, m.q_lora_rank, dtype),
+        "q_a_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": init_linear(ks[1], m.q_lora_rank, H * qk_hd, dtype),
+        "wkv_a": init_linear(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_a_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wkv_b": init_linear(ks[3], m.kv_lora_rank,
+                             H * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": init_linear(ks[4], H * m.v_head_dim, d, dtype),
+    }
+
+
+def _project_q(params, x, cfg, cos, sin):
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    qa = rms_norm(params["q_a_norm"], x @ params["wq_a"].astype(x.dtype),
+                  cfg.norm_eps)
+    q = (qa @ params["wq_b"].astype(x.dtype)).reshape(
+        B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def compress_kv(params, x, cfg, cos, sin):
+    """x → (c_kv (B,S,r), k_rope (B,S,1,rope)) — the cached latent."""
+    m = cfg.mla
+    kv = x @ params["wkv_a"].astype(x.dtype)
+    c_kv = rms_norm(params["kv_a_norm"], kv[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, m.kv_lora_rank:], cos, sin)
+    return c_kv, k_rope[..., 0, :]
+
+
+def mla_train(params, x, cfg, cos, sin):
+    """Full (non-absorbed) path for train/prefill: expand latents to heads."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    q_nope, q_rope = _project_q(params, x, cfg, cos, sin)
+    c_kv, k_rope = compress_kv(params, x, cfg, cos, sin)
+    kvb = (c_kv @ params["wkv_b"].astype(x.dtype)).reshape(
+        B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = kvb[..., :m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    o = attention(q, k, v, causal=True, scale=scale,
+                  chunk_q=cfg.attn_chunk_q)
+    o = o.reshape(B, S, H * m.v_head_dim)
+    return o @ params["wo"].astype(x.dtype), (c_kv, k_rope)
+
+
+def mla_decode(params, x, cfg, cos, sin, c_cache, rope_cache, kv_len):
+    """Absorbed decode: contract queries against cached latents.
+
+    c_cache (B,Skv,r); rope_cache (B,Skv,rope); x (B,1,d).
+
+    The score is computed as two SEPARATE contractions (latent + rope)
+    rather than concatenating the caches: the KV-WAL stripes c and rope as
+    two arenas each sharded on its own dim, and a concat of two
+    differently-sharded tensors forces SPMD resharding (§Perf C4 — the
+    same slice/concat pathology fixed for dense arenas in DESIGN §2).
+    """
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    q_nope, q_rope = _project_q(params, x, cfg, cos, sin)
+    # Absorb W_uk into the query: q̃ = q_nope · W_uk → latent space.
+    wkv_b = params["wkv_b"].astype(x.dtype).reshape(
+        m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[..., :m.qk_nope_head_dim]                 # (r,H,nope)
+    w_uv = wkv_b[..., m.qk_nope_head_dim:]                 # (r,H,v)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)     # (B,S,H,r)
+    if cfg.decode_q_hd_axis is not None:
+        from jax.sharding import PartitionSpec as P
+        ba = cfg.act_batch_axes or ("data",)
+        bax = ba if len(ba) > 1 else ba[0]
+        try:
+            q_lat = jax.lax.with_sharding_constraint(
+                q_lat, P(bax, None, None, cfg.decode_q_hd_axis))
+            q_rope = jax.lax.with_sharding_constraint(
+                q_rope, P(bax, None, None, cfg.decode_q_hd_axis))
+        except (ValueError, RuntimeError):
+            pass
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (jnp.einsum("bshr,btr->bhst", q_lat, c_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bshp,btp->bhst", q_rope, rope_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    kv_pos = jnp.arange(c_cache.shape[1])[None, None, None, :]
+    s = jnp.where(kv_pos < kv_len[:, None, None, None], s,
+                  jnp.float32(-1e30))
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)         # (B,H,S,T)
+    o_lat = jnp.einsum("bhst,btr->bshr", p, c_cache)       # (B,S,H,r)
+    o = jnp.einsum("bshr,rhv->bshv", o_lat, w_uv)
+    o = o.reshape(B, S, H * m.v_head_dim)
+    return o @ params["wo"].astype(x.dtype)

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts with GShard-style capacity dispatch.
+
+Tokens are processed in groups of ``group_size``; within each group every
+token routes to its top-k experts subject to a per-expert capacity
+C = ceil(S·k·cf / E).  Dispatch/combine are einsums against a one-hot
+dispatch tensor, which GSPMD partitions predictably: groups shard over the
+data axis, experts over the model axis, and the dispatch einsum lowers to a
+local einsum + all-to-all.  Dispatch overhead is T·E·C·d MACs ≈ 0.1% of the
+expert FFN compute at our group sizes (verified in the roofline table).
+
+Shared experts (qwen2-moe, deepseek-v3) run densely for every token.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .base import MoEConfig
+from .layers import init_linear
+
+
+def moe_capacity(cfg: MoEConfig) -> int:
+    c = math.ceil(cfg.group_size * cfg.top_k * cfg.capacity_factor
+                  / cfg.n_experts)
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    ff = cfg.expert_d_ff
+    E = cfg.n_experts
+    scale = 0.02
+    p = {
+        "router": init_linear(ks[0], d_model, E, jnp.float32),
+        "we_gate": (jax.random.normal(ks[1], (E, d_model, ff)) * scale).astype(dtype),
+        "we_up": (jax.random.normal(ks[2], (E, d_model, ff)) * scale).astype(dtype),
+        "we_down": (jax.random.normal(ks[3], (E, ff, d_model)) * scale).astype(dtype),
+    }
+    if cfg.n_shared:
+        sff = (cfg.shared_d_ff or ff) * cfg.n_shared
+        p["ws_gate"] = init_linear(ks[4], d_model, sff, dtype)
+        p["ws_up"] = init_linear(ks[5], d_model, sff, dtype)
+        p["ws_down"] = init_linear(ks[6], sff, d_model, dtype)
+    return p
+
+
+def _wsc(x, spec):
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*spec))
+    except (ValueError, RuntimeError):          # no mesh context (CPU tests)
+        return x
+
+
+def moe_block(params: dict, x: jax.Array, cfg: MoEConfig,
+              dispatch_axes=None) -> tuple[jax.Array, jax.Array]:
+    """x (B,S,d) → (y (B,S,d), aux_loss scalar).
+
+    ``dispatch_axes = (group_axis, expert_axis)`` pins the expert-parallel
+    layout: groups shard over the data axis, experts over the model axis, so
+    the dispatch einsum lowers to the canonical MoE all-to-all instead of
+    GSPMD replicating the (G,E,C,d) buffers (§Perf hillclimb #2)."""
+    B, S, d = x.shape
+    T = B * S
+    g = min(cfg.group_size, T)
+    G = T // g
+    E, k = cfg.n_experts, cfg.top_k
+    C = moe_capacity(cfg)
+    xg = x.reshape(G, g, d)
+
+    logits = (xg.astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))          # (G,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                       # (G,g,k)
+    if cfg.router_norm_topk:
+        topv = topv / (jnp.sum(topv, axis=-1, keepdims=True) + 1e-9)
+
+    # Per-(token, expert) membership and position-in-expert-buffer.
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)        # (G,g,k,E)
+    member = jnp.sum(onehot, axis=2)                           # (G,g,E)
+    pos = jnp.cumsum(member, axis=1) - member                  # pos before me
+    keep = member * (pos < C)                                  # capacity drop
+    dispatch = keep[..., None] * jax.nn.one_hot(
+        pos.astype(jnp.int32), C, dtype=jnp.float32)           # (G,g,E,C)
+    gates = jnp.sum(onehot * topv[..., None], axis=2) * keep   # (G,g,E)
+
+    # Load-balancing auxiliary loss (Switch-style).
+    density = jnp.mean(member, axis=1)                         # (G,E)
+    density_proxy = jnp.mean(probs, axis=1)
+    aux = jnp.mean(density * density_proxy) * (E * E)
+
+    dt = x.dtype
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch.astype(dt), xg,
+                           preferred_element_type=dt)          # (G,E,C,d)
+    if dispatch_axes is not None:
+        ga, ea = dispatch_axes
+        expert_in = _wsc(expert_in, (ga, ea, None, None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in,
+                               params["we_gate"].astype(dt))) \
+        * jnp.einsum("gecd,edf->gecf", expert_in, params["we_up"].astype(dt))
+    expert_out = jnp.einsum("gecf,efd->gecd", h,
+                            params["we_down"].astype(dt))      # (G,E,C,d)
+    if dispatch_axes is not None:
+        expert_out = _wsc(expert_out, (dispatch_axes[0], dispatch_axes[1],
+                                       None, None))
+    combine = (dispatch * gates[..., None]).astype(dt)
+    y = jnp.einsum("gsec,gecd->gsd", combine, expert_out)
+
+    if "ws_gate" in params:                                    # shared experts
+        sh = jax.nn.silu(xg @ params["ws_gate"].astype(dt)) \
+            * (xg @ params["ws_up"].astype(dt))
+        y = y + sh @ params["ws_down"].astype(dt)
+    return y.reshape(B, S, d), aux.astype(jnp.float32)

@@ -1,0 +1,520 @@
+"""Serving paths: prefill and single-token decode over the Tidehunter KV-WAL.
+
+Every family exposes:
+- ``cache_spec(cfg, batch, max_seq)``  → dict of ShapeDtypeStructs
+- ``init_cache(cfg, batch, max_seq)``  → zeroed cache pytree
+- ``prefill(params, cfg, batch_inputs, cache)`` → (last-token logits, cache)
+- ``decode_step(params, cfg, cache, tokens)``   → (logits, cache)
+
+Attention families read K/V *through* the KV-WAL slot table (the Large
+Table analogue) with the per-sequence ``first_live`` epoch watermark masking
+pruned segments.  SSM/recurrent families carry fixed-size states instead —
+the KV-WAL is inapplicable to their layer state (DESIGN §Arch-applicability)
+but their caches are still checkpointed through the tidestore.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvwal
+from .base import ModelConfig
+from .griffin import lru_width, recurrent_block
+from .layers import (apply_rope, attention, mlp_block, rms_norm, rope_angles,
+                     sinusoidal_embedding)
+from .mla import compress_kv, init_mla, mla_decode, mla_train, _project_q
+from .moe import moe_block
+from .ssm import ssm_block, ssm_dims
+from .transformer import (_angles, _griffin_block_fwd, embed_tokens, encode,
+                          lm_logits)
+
+
+# ------------------------------------------------------------- cache shapes
+def kv_entry_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(kv_heads, k_dim, v_dim) of one KV-WAL slot value.
+
+    One logical value per (token, layer), striped across two parallel
+    arenas so each stripe shards cleanly on TPU (slicing a packed,
+    model-sharded entry dim would force SPMD rematerialization — DESIGN §2).
+    """
+    if cfg.mla is not None:
+        return 1, cfg.mla.kv_lora_rank, cfg.mla.qk_rope_head_dim
+    return cfg.n_kv_heads, cfg.hd, cfg.hd
+
+
+def _attn_wal_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                    n_layers: Optional[int] = None
+                    ) -> tuple[kvwal.KVWalSpec, kvwal.KVWalSpec]:
+    kh, kd, vd = kv_entry_dims(cfg)
+    L = n_layers if n_layers is not None else cfg.n_layers
+    mk = lambda d: kvwal.KVWalSpec(
+        n_layers=L, batch=batch, max_seq=max_seq, kv_heads=kh, entry_dim=d,
+        block_size=cfg.kv_block, dtype=cfg.dtype)
+    return mk(kd), mk(vd)
+
+
+def _wal_cache_specs(cfg, batch, max_seq, n_layers=None) -> dict:
+    ks, vs = _attn_wal_specs(cfg, batch, max_seq, n_layers)
+    return {
+        "arena_k": jax.ShapeDtypeStruct(ks.arena_shape(), jnp.dtype(cfg.dtype)),
+        "arena_v": jax.ShapeDtypeStruct(vs.arena_shape(), jnp.dtype(cfg.dtype)),
+        "table": jax.ShapeDtypeStruct((batch, ks.n_blocks), jnp.int32),
+        "seq_lens": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "first_live": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    dt = cfg.adtype
+    if cfg.family in ("dense", "vlm", "moe"):
+        return _wal_cache_specs(cfg, batch, max_seq)
+    if cfg.family == "ssm":
+        d_inner, nh, bc_dim = ssm_dims(cfg)
+        s = cfg.ssm
+        L = cfg.n_layers
+        return {
+            "conv_x": jax.ShapeDtypeStruct((L, batch, s.d_conv - 1, d_inner), dt),
+            "conv_bc": jax.ShapeDtypeStruct((L, batch, s.d_conv - 1, bc_dim), dt),
+            "state": jax.ShapeDtypeStruct(
+                (L, batch, nh, s.head_dim, s.d_state), jnp.float32),
+            "seq_lens": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        }
+    if cfg.family == "griffin":
+        return jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+            if not isinstance(a, jax.ShapeDtypeStruct) else a,
+            _griffin_cache(cfg, batch, max_seq, as_spec=True))
+    if cfg.family == "encdec":
+        kh, kd, vd = kv_entry_dims(cfg)
+        base = _wal_cache_specs(cfg, batch, max_seq)
+        base["cross_k"] = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.encoder_seq, kh, kd), dt)
+        base["cross_v"] = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.encoder_seq, kh, vd), dt)
+        return base
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    cache = {}
+    for k, s in cache_spec(cfg, batch, max_seq).items():
+        if k == "table" or k.endswith("_table"):
+            # Slot tables start as the identity mapping: blocks are
+            # allocated append-only in logical order (§3.1).
+            cache[k] = jnp.broadcast_to(
+                jnp.arange(s.shape[1], dtype=s.dtype), s.shape)
+        else:
+            cache[k] = jnp.zeros(s.shape, s.dtype)
+    return cache
+
+
+def _griffin_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                   as_spec: bool = False):
+    g = cfg.griffin
+    period = len(g.pattern)
+    n_groups = cfg.n_layers // period
+    n_tail = cfg.n_layers - n_groups * period
+    n_rec = sum(1 for k in g.pattern if k == "rec")
+    w = lru_width(cfg)
+    kspec, vspec = _attn_wal_specs(cfg, batch, max_seq, n_layers=n_groups)
+    mk = (lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)) if as_spec \
+        else (lambda sh, dt: jnp.zeros(sh, dt))
+    dt = cfg.adtype
+    cache = {
+        "conv": mk((n_groups, n_rec, batch, g.conv_width - 1, w), dt),
+        "lru": mk((n_groups, n_rec, batch, w), jnp.float32),
+        "seq_lens": mk((batch,), jnp.int32),
+        "first_live": mk((batch,), jnp.int32),
+        "arena_k": mk(kspec.arena_shape(), jnp.dtype(cfg.dtype)),
+        "arena_v": mk(vspec.arena_shape(), jnp.dtype(cfg.dtype)),
+        "table": mk((batch, kspec.n_blocks), jnp.int32),
+    }
+    for i in range(n_tail):
+        kind = g.pattern[i % period]
+        if kind == "rec":
+            cache[f"tail{i}_conv"] = mk((batch, g.conv_width - 1, w), dt)
+            cache[f"tail{i}_lru"] = mk((batch, w), jnp.float32)
+        else:
+            tk, tv = _attn_wal_specs(cfg, batch, max_seq, n_layers=1)
+            cache[f"tail{i}_arena_k"] = mk(tk.arena_shape()[1:],
+                                           jnp.dtype(cfg.dtype))
+            cache[f"tail{i}_arena_v"] = mk(tv.arena_shape()[1:],
+                                           jnp.dtype(cfg.dtype))
+    return cache
+
+
+# ----------------------------------------------------- dense/moe/vlm decode
+def _self_attn_decode(cfg: ModelConfig, layer_p, h, arena_k, arena_v, table,
+                      seq_lens, first_live, cos, sin, window: int = 0):
+    """One decode self-attention through the KV-WAL.  h (B,1,d)."""
+    B = h.shape[0]
+    if cfg.mla is not None:
+        c_kv, k_rope = compress_kv(layer_p["attn"], h, cfg, cos, sin)
+        arena_k = kvwal.append_token(arena_k, table, seq_lens,
+                                     c_kv[:, 0, None, :])
+        arena_v = kvwal.append_token(arena_v, table, seq_lens,
+                                     k_rope[:, 0, None, :])
+        c_cache = kvwal.gather(arena_k, table)[:, :, 0, :]   # (B,S,r)
+        rope_cache = kvwal.gather(arena_v, table)[:, :, 0, :]
+        out = mla_decode(layer_p["attn"], h, cfg, cos, sin,
+                         c_cache, rope_cache, kv_len=seq_lens + 1)
+        return out, arena_k, arena_v
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = layer_p["attn"]
+    q = (h @ p["wq"].astype(h.dtype)).reshape(B, 1, H, hd)
+    k = (h @ p["wk"].astype(h.dtype)).reshape(B, 1, KH, hd)
+    v = (h @ p["wv"].astype(h.dtype)).reshape(B, 1, KH, hd)
+    if "q_norm" in p:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = _maybe_shard_decode_q(cfg, q)
+    arena_k = kvwal.append_token(arena_k, table, seq_lens, k[:, 0])
+    arena_v = kvwal.append_token(arena_v, table, seq_lens, v[:, 0])
+    o = attention(q, kvwal.gather(arena_k, table),
+                  kvwal.gather(arena_v, table), causal=False,
+                  q_offset=seq_lens, kv_len=seq_lens + 1,
+                  kv_start=first_live, window=window)
+    o = o.reshape(B, 1, H * hd)
+    return o @ p["wo"].astype(h.dtype), arena_k, arena_v
+
+
+def _maybe_shard_decode_q(cfg: ModelConfig, q: jax.Array) -> jax.Array:
+    """§Perf lever: constrain decode q to shard head_dim like the arena, so
+    the q·k contraction is aligned and lowers to a tiny scores-psum instead
+    of an arena-sized all-gather (q is ~1 MB; the arena is GBs)."""
+    if cfg.decode_q_hd_axis is None:
+        return q
+    from jax.sharding import PartitionSpec as P
+    ba = cfg.act_batch_axes or ("data",)
+    try:
+        return jax.lax.with_sharding_constraint(
+            q, P(ba if len(ba) > 1 else ba[0], None, None,
+                 cfg.decode_q_hd_axis))
+    except (ValueError, RuntimeError):
+        return q
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                mrope_positions=None) -> tuple[jax.Array, dict]:
+    """One new token per sequence.  tokens (B,) → logits (B, V)."""
+    B = tokens.shape[0]
+    x = embed_tokens(params, cfg, tokens[:, None])
+    seq_lens = cache["seq_lens"]
+    positions = seq_lens[:, None]
+    if cfg.family == "encdec":
+        pos_emb = sinusoidal_embedding(positions, cfg.d_model)
+        x = x + pos_emb.astype(x.dtype)
+        cos = sin = None
+    else:
+        cos, sin = _angles(cfg, positions, mrope_positions)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(xc, scanned):
+            layer_p, ak, av = scanned
+            h = rms_norm(layer_p["ln1"], xc, cfg.norm_eps)
+            out, ak, av = _self_attn_decode(
+                cfg, layer_p, h, ak, av, cache["table"], seq_lens,
+                cache["first_live"], cos, sin)
+            xc = xc + out
+            h = rms_norm(layer_p["ln2"], xc, cfg.norm_eps)
+            if cfg.moe is not None:
+                ffn, _ = moe_block(layer_p["moe"], h, cfg.moe)
+            else:
+                ffn = mlp_block(layer_p["mlp"], h, cfg.act)
+            return xc + ffn, (ak, av)
+        x, (nak, nav) = jax.lax.scan(
+            body, x, (params["layers"], cache["arena_k"], cache["arena_v"]))
+        cache = dict(cache, arena_k=nak, arena_v=nav, seq_lens=seq_lens + 1)
+    elif cfg.family == "ssm":
+        def body(xc, scanned):
+            layer_p, cx, cbc, ssm_s = scanned
+            h = rms_norm(layer_p["ln1"], xc, cfg.norm_eps)
+            out, (cx, cbc, ssm_s) = ssm_block(
+                layer_p["ssm"], h, cfg, conv_x_state=cx, conv_bc_state=cbc,
+                ssm_state=ssm_s, decode=True)
+            return xc + out, (cx.astype(cfg.adtype), cbc.astype(cfg.adtype),
+                              ssm_s)
+        x, (conv_x, conv_bc, state) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv_x"], cache["conv_bc"],
+                      cache["state"]))
+        cache = dict(cache, conv_x=conv_x, conv_bc=conv_bc, state=state,
+                     seq_lens=seq_lens + 1)
+    elif cfg.family == "griffin":
+        x, cache = _griffin_decode(params, cfg, cache, x, cos, sin)
+    elif cfg.family == "encdec":
+        x, cache = _whisper_decode(params, cfg, cache, x)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(params, cfg, x)[:, 0], cache
+
+
+def _griffin_decode(params, cfg, cache, x, cos, sin):
+    g = cfg.griffin
+    pattern = g.pattern
+    seq_lens = cache["seq_lens"]
+
+    def group_body(xc, scanned):
+        group_p, conv_g, lru_g, ak_g, av_g = scanned
+        ri = 0
+        new_conv, new_lru = [], []
+        for i, kind in enumerate(pattern):
+            blk = group_p[f"blk{i}"]
+            h = rms_norm(blk["ln1"], xc, cfg.norm_eps)
+            if kind == "attn":
+                out, ak_g, av_g = _griffin_attn_decode(
+                    cfg, blk, h, ak_g, av_g, cache["table"], seq_lens,
+                    cache["first_live"], cos, sin)
+            else:
+                out, (cs, ls) = recurrent_block(blk["rec"], h, cfg,
+                                                conv_state=conv_g[ri],
+                                                lru_state=lru_g[ri])
+                new_conv.append(cs)
+                new_lru.append(ls)
+                ri += 1
+            xc = xc + out
+            h = rms_norm(blk["ln2"], xc, cfg.norm_eps)
+            xc = xc + mlp_block(blk["mlp"], h, cfg.act)
+        return xc, (jnp.stack(new_conv), jnp.stack(new_lru), ak_g, av_g)
+
+    x, (conv, lru, arena_k, arena_v) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], cache["conv"], cache["lru"],
+         cache["arena_k"], cache["arena_v"]))
+    new_cache = dict(cache, conv=conv, lru=lru, arena_k=arena_k,
+                     arena_v=arena_v)
+    for i, blk in enumerate(params["tail"]):
+        kind = pattern[i % len(pattern)]
+        h = rms_norm(blk["ln1"], x, cfg.norm_eps)
+        if kind == "attn":
+            out, nak, nav = _griffin_attn_decode(
+                cfg, blk, h, new_cache[f"tail{i}_arena_k"],
+                new_cache[f"tail{i}_arena_v"], cache["table"],
+                seq_lens, cache["first_live"], cos, sin)
+            new_cache[f"tail{i}_arena_k"] = nak
+            new_cache[f"tail{i}_arena_v"] = nav
+        else:
+            out, (cs, ls) = recurrent_block(
+                blk["rec"], h, cfg, conv_state=new_cache[f"tail{i}_conv"],
+                lru_state=new_cache[f"tail{i}_lru"])
+            new_cache[f"tail{i}_conv"] = cs
+            new_cache[f"tail{i}_lru"] = ls
+        x = x + out
+        h = rms_norm(blk["ln2"], x, cfg.norm_eps)
+        x = x + mlp_block(blk["mlp"], h, cfg.act)
+    new_cache["seq_lens"] = seq_lens + 1
+    # Sliding-window epoch pruning: KV-WAL segments (blocks) that fall wholly
+    # behind the attention window expire — zero bytes moved (§4.4 adapted).
+    block = new_cache["arena_k"].shape[3]
+    min_live = jnp.maximum(seq_lens + 1 - g.window, 0)
+    new_cache["first_live"] = jnp.maximum(cache["first_live"],
+                                          (min_live // block) * block)
+    return x, new_cache
+
+
+def _griffin_attn_decode(cfg, blk, h, arena_k, arena_v, table, seq_lens,
+                         first_live, cos, sin):
+    B = h.shape[0]
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = blk["attn"]
+    q = (h @ p["wq"].astype(h.dtype)).reshape(B, 1, H, hd)
+    k = (h @ p["wk"].astype(h.dtype)).reshape(B, 1, KH, hd)
+    v = (h @ p["wv"].astype(h.dtype)).reshape(B, 1, KH, hd)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    arena_k = kvwal.append_token(arena_k, table, seq_lens, k[:, 0])
+    arena_v = kvwal.append_token(arena_v, table, seq_lens, v[:, 0])
+    o = attention(q, kvwal.gather(arena_k, table),
+                  kvwal.gather(arena_v, table), causal=False,
+                  q_offset=seq_lens, kv_len=seq_lens + 1,
+                  kv_start=first_live, window=cfg.griffin.window)
+    o = o.reshape(B, 1, H * hd)
+    return o @ p["wo"].astype(h.dtype), arena_k, arena_v
+
+
+def _whisper_decode(params, cfg, cache, x):
+    seq_lens = cache["seq_lens"]
+    KH, hd = cfg.n_kv_heads, cfg.hd
+
+    def body(xc, scanned):
+        layer_p, ak, av, ck, cv = scanned
+        h = rms_norm(layer_p["ln1"], xc, cfg.norm_eps)
+        out, ak, av = _self_attn_decode(
+            cfg, layer_p, h, ak, av, cache["table"], seq_lens,
+            cache["first_live"], None, None)
+        xc = xc + out
+        h = rms_norm(layer_p["ln_x"], xc, cfg.norm_eps)
+        B = h.shape[0]
+        q = (h @ layer_p["xattn"]["wq"].astype(h.dtype)).reshape(B, 1,
+                                                                 cfg.n_heads, hd)
+        o = attention(q, ck, cv, causal=False)
+        o = o.reshape(B, 1, cfg.n_heads * hd)
+        xc = xc + o @ layer_p["xattn"]["wo"].astype(h.dtype)
+        h = rms_norm(layer_p["ln2"], xc, cfg.norm_eps)
+        return xc + mlp_block(layer_p["mlp"], h, cfg.act), (ak, av)
+
+    x, (nak, nav) = jax.lax.scan(
+        body, x, (params["layers"], cache["arena_k"], cache["arena_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    return x, dict(cache, arena_k=nak, arena_v=nav, seq_lens=seq_lens + 1)
+
+
+# ------------------------------------------------------------------ prefill
+def prefill(params, cfg: ModelConfig, batch: dict, max_seq: int
+            ) -> tuple[jax.Array, dict]:
+    """Run the prompt, writing every position's KV entry into a fresh
+    KV-WAL arena (write-once: these bytes never move again)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params, cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cache = init_cache(cfg, B, max_seq)
+    if cfg.family == "vlm" and batch.get("vision_embed") is not None:
+        x = jax.lax.dynamic_update_slice(
+            x, batch["vision_embed"].astype(x.dtype), (0, 0, 0))
+    if cfg.family == "encdec":
+        cos = sin = None
+        x = x + sinusoidal_embedding(positions, cfg.d_model).astype(x.dtype)
+        enc = encode(params, cfg, batch["frames"])
+    else:
+        cos, sin = _angles(cfg, positions, batch.get("mrope_positions"))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(xc, scanned):
+            layer_p, ak, av = scanned
+            h = rms_norm(layer_p["ln1"], xc, cfg.norm_eps)
+            if cfg.mla is not None:
+                out, (c_kv, k_rope) = mla_train(layer_p["attn"], h, cfg,
+                                                cos, sin)
+                k_entry = c_kv[:, :, None, :]
+                v_entry = k_rope[:, :, None, :]
+            else:
+                out, (k_entry, v_entry) = _gqa_with_kv(cfg, layer_p["attn"],
+                                                       h, cos, sin)
+            ak = kvwal.write_prefill(ak, k_entry)
+            av = kvwal.write_prefill(av, v_entry)
+            xc = xc + out
+            h = rms_norm(layer_p["ln2"], xc, cfg.norm_eps)
+            if cfg.moe is not None:
+                ffn, _ = moe_block(layer_p["moe"], h, cfg.moe)
+            else:
+                ffn = mlp_block(layer_p["mlp"], h, cfg.act)
+            return xc + ffn, (ak, av)
+        x, (nak, nav) = jax.lax.scan(
+            body, x, (params["layers"], cache["arena_k"], cache["arena_v"]))
+        cache = dict(cache, arena_k=nak, arena_v=nav,
+                     seq_lens=jnp.full((B,), S, jnp.int32))
+    elif cfg.family == "ssm":
+        def body(xc, layer_p):
+            h = rms_norm(layer_p["ln1"], xc, cfg.norm_eps)
+            out, (cx, cbc, ssm_s) = ssm_block(layer_p["ssm"], h, cfg)
+            return xc + out, (cx.astype(cfg.adtype), cbc.astype(cfg.adtype),
+                              ssm_s)
+        x, (conv_x, conv_bc, state) = jax.lax.scan(body, x, params["layers"])
+        cache = dict(cache, conv_x=conv_x, conv_bc=conv_bc, state=state,
+                     seq_lens=jnp.full((B,), S, jnp.int32))
+    elif cfg.family == "griffin":
+        x, cache = _griffin_prefill(params, cfg, cache, x, cos, sin, S)
+    elif cfg.family == "encdec":
+        def body(xc, scanned):
+            layer_p, ak, av = scanned
+            h = rms_norm(layer_p["ln1"], xc, cfg.norm_eps)
+            out, (k, v) = _gqa_with_kv(cfg, layer_p["attn"], h, None, None)
+            ak = kvwal.write_prefill(ak, k)
+            av = kvwal.write_prefill(av, v)
+            xc = xc + out
+            h = rms_norm(layer_p["ln_x"], xc, cfg.norm_eps)
+            B_, S_, _ = h.shape
+            KH, hd = cfg.n_kv_heads, cfg.hd
+            ck = (enc @ layer_p["xattn"]["wk"].astype(h.dtype)).reshape(
+                B_, -1, KH, hd)
+            cv = (enc @ layer_p["xattn"]["wv"].astype(h.dtype)).reshape(
+                B_, -1, KH, hd)
+            q = (h @ layer_p["xattn"]["wq"].astype(h.dtype)).reshape(
+                B_, S_, cfg.n_heads, hd)
+            o = attention(q, ck, cv, causal=False, chunk_q=cfg.attn_chunk_q)
+            o = o.reshape(B_, S_, cfg.n_heads * hd)
+            xc = xc + o @ layer_p["xattn"]["wo"].astype(h.dtype)
+            h = rms_norm(layer_p["ln2"], xc, cfg.norm_eps)
+            return (xc + mlp_block(layer_p["mlp"], h, cfg.act),
+                    (ak, av, ck, cv))
+        x, (nak, nav, cross_k, cross_v) = jax.lax.scan(
+            body, x, (params["layers"], cache["arena_k"], cache["arena_v"]))
+        cache = dict(cache, arena_k=nak, arena_v=nav, cross_k=cross_k,
+                     cross_v=cross_v, seq_lens=jnp.full((B,), S, jnp.int32))
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits_last = lm_logits(params, cfg, x[:, -1:, :])[:, 0]
+    return logits_last, cache
+
+
+def _gqa_with_kv(cfg, p, h, cos, sin, window: int = 0):
+    """Causal self-attention that also returns the rotated K and V."""
+    B, S, _ = h.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (h @ p["wq"].astype(h.dtype)).reshape(B, S, H, hd)
+    k = (h @ p["wk"].astype(h.dtype)).reshape(B, S, KH, hd)
+    v = (h @ p["wv"].astype(h.dtype)).reshape(B, S, KH, hd)
+    if "q_norm" in p:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    o = attention(q, k, v, causal=cfg.causal, window=window,
+                  chunk_q=cfg.attn_chunk_q)
+    o = o.reshape(B, S, H * hd)
+    return o @ p["wo"].astype(h.dtype), (k, v)
+
+
+def _griffin_prefill(params, cfg, cache, x, cos, sin, S):
+    pattern = cfg.griffin.pattern
+    B = x.shape[0]
+
+    def group_body(xc, scanned):
+        group_p, ak_g, av_g = scanned
+        convs, lrus = [], []
+        for i, kind in enumerate(pattern):
+            blk = group_p[f"blk{i}"]
+            h = rms_norm(blk["ln1"], xc, cfg.norm_eps)
+            if kind == "attn":
+                out, (k, v) = _gqa_with_kv(cfg, blk["attn"], h, cos, sin,
+                                           window=cfg.griffin.window)
+                ak_g = kvwal.write_prefill(ak_g, k)
+                av_g = kvwal.write_prefill(av_g, v)
+            else:
+                out, (cs, ls) = recurrent_block(blk["rec"], h, cfg)
+                convs.append(cs)
+                lrus.append(ls)
+            xc = xc + out
+            h = rms_norm(blk["ln2"], xc, cfg.norm_eps)
+            xc = xc + mlp_block(blk["mlp"], h, cfg.act)
+        return xc, (jnp.stack(convs).astype(cfg.adtype), jnp.stack(lrus),
+                    ak_g, av_g)
+
+    x, (conv, lru, arena_k, arena_v) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], cache["arena_k"], cache["arena_v"]))
+    new_cache = dict(cache, conv=conv, lru=lru, arena_k=arena_k,
+                     arena_v=arena_v, seq_lens=jnp.full((B,), S, jnp.int32))
+    for i, blk in enumerate(params["tail"]):
+        kind = pattern[i % len(pattern)]
+        h = rms_norm(blk["ln1"], x, cfg.norm_eps)
+        if kind == "attn":
+            out, (k, v) = _gqa_with_kv(cfg, blk["attn"], h, cos, sin,
+                                       window=cfg.griffin.window)
+            new_cache[f"tail{i}_arena_k"] = kvwal.write_prefill(
+                new_cache[f"tail{i}_arena_k"], k)
+            new_cache[f"tail{i}_arena_v"] = kvwal.write_prefill(
+                new_cache[f"tail{i}_arena_v"], v)
+        else:
+            out, (cs, ls) = recurrent_block(blk["rec"], h, cfg)
+            new_cache[f"tail{i}_conv"] = cs.astype(cfg.adtype)
+            new_cache[f"tail{i}_lru"] = ls
+        x = x + out
+        h = rms_norm(blk["ln2"], x, cfg.norm_eps)
+        x = x + mlp_block(blk["mlp"], h, cfg.act)
+    return x, new_cache

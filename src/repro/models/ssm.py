@@ -1,0 +1,184 @@
+"""Mamba-2 SSD layer (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: within-chunk terms are
+attention-like einsums against the 1-semiseparable mask, cross-chunk terms
+flow through a small recurrence over per-chunk states (lax.scan over
+n_chunks steps — cheap, as n_chunks = L/256).  Decode is the O(1) recurrent
+update.  Sub-quadratic in sequence length, which is why mamba2 runs the
+long_500k cell.
+
+Sharding note: projections are kept as separate matrices (in_z, in_x,
+in_bc, in_dt) rather than one fused in_proj so each output shards cleanly —
+x/z/dt shard head-aligned over the model axis, while the (small,
+group-shared) B/C stay replicated.  A fused projection would split at
+non-shard-aligned boundaries and force full-activation all-gathers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+from .layers import init_linear, rms_norm
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, 2 * s.d_state
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, bc_dim = ssm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": init_linear(ks[0], d, d_inner, dtype),
+        "in_x": init_linear(ks[1], d, d_inner, dtype),
+        "in_bc": init_linear(ks[2], d, bc_dim, dtype),
+        "in_dt": init_linear(ks[3], d, n_heads, dtype),
+        "conv_x_w": (jax.random.normal(ks[4], (s.d_conv, d_inner)) * 0.1
+                     ).astype(dtype),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_bc_w": (jax.random.normal(ks[5], (s.d_conv, bc_dim)) * 0.1
+                      ).astype(dtype),
+        "conv_bc_b": jnp.zeros((bc_dim,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),        # A = -exp(A_log)
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), dtype),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": init_linear(ks[6], d_inner, d, dtype),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv over seq.  u (B,L,C); w (K,C).
+    Returns (y (B,L,C), new_state (B,K-1,C))."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    y = sum(full[:, i:i + u.shape[1], :] * w[i][None, None, :]
+            for i in range(K))
+    return jax.nn.silu(y + b[None, None, :]), full[:, -(K - 1):, :]
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (...,c) → (...,c,c) lower-tri cumulative sums: out[i,j]=sum_{j<t<=i}."""
+    c = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD.
+
+    x (b,l,h,p); dt (b,l,h) (post-softplus); A (h,) negative;
+    Bm, Cm (b,l,n) (single group, MQA-style).  Returns (y, final_state
+    (b,h,p,n))."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    c = min(chunk, l)
+    orig_l = l
+    if l % c:
+        # Pad to a chunk multiple: dt=0 ⇒ decay 1 and zero state
+        # contribution, so padding is exactly state-neutral.
+        pad = c - l % c
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        l = l + pad
+    nc = l // c
+    xr = x.reshape(b, nc, c, h, p)
+    dtr = dt.reshape(b, nc, c, h)
+    Br = Bm.reshape(b, nc, c, n)
+    Cr = Cm.reshape(b, nc, c, n)
+    dA = dtr * A[None, None, None, :]                      # (b,z,c,h)
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # Within-chunk (attention-like) term.
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))          # (b,z,h,c,c)
+    att = jnp.einsum("bzin,bzjn->bzij", Cr, Br)             # (b,z,c,c)
+    xdt = xr * dtr[..., None]
+    y_diag = jnp.einsum("bzij,bzhij,bzjhp->bzihp",
+                        att.astype(jnp.float32), L,
+                        xdt.astype(jnp.float32))
+
+    # Per-chunk states.
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)     # (b,z,c,h)
+    states = jnp.einsum("bzcn,bzchp,bzch->bzhpn",
+                        Br.astype(jnp.float32), xdt.astype(jnp.float32),
+                        decay_to_end)
+
+    # Cross-chunk recurrence (small scan over chunks).
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])               # (b,z,h)
+
+    def step(carry, inp):
+        s, g = inp                                          # (b,h,p,n),(b,h)
+        new = carry * g[..., None, None] + s
+        return new, carry
+
+    init = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (b,z,h,p,n)
+
+    decay_from_start = jnp.exp(dA_cs)                       # (b,z,c,h)
+    y_off = jnp.einsum("bzcn,bzhpn,bzch->bzchp",
+                       Cr.astype(jnp.float32), prev_states, decay_from_start)
+    y = (y_diag + y_off).reshape(b, l, h, p).astype(x.dtype)
+    return y[:, :orig_l], final
+
+
+def ssm_block(params: dict, x: jax.Array, cfg: ModelConfig,
+              conv_x_state=None, conv_bc_state=None, ssm_state=None,
+              decode: bool = False):
+    """Full Mamba-2 block.
+    Returns (y, (new_conv_x, new_conv_bc, new_ssm_state))."""
+    s = cfg.ssm
+    d_inner, n_heads, bc_dim = ssm_dims(cfg)
+    B, L, _ = x.shape
+    z = x @ params["in_z"].astype(x.dtype)
+    xin = x @ params["in_x"].astype(x.dtype)
+    bc = x @ params["in_bc"].astype(x.dtype)
+    dt_raw = x @ params["in_dt"].astype(x.dtype)
+    xin, new_conv_x = _causal_conv(xin, params["conv_x_w"].astype(x.dtype),
+                                   params["conv_x_b"].astype(x.dtype),
+                                   conv_x_state)
+    bc, new_conv_bc = _causal_conv(bc, params["conv_bc_w"].astype(x.dtype),
+                                   params["conv_bc_b"].astype(x.dtype),
+                                   conv_bc_state)
+    xs = xin.reshape(B, L, n_heads, s.head_dim)
+    Bm = bc[..., :s.d_state]
+    Cm = bc[..., s.d_state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+
+    if decode:
+        # O(1) recurrent update: h' = exp(dt·A)h + dt·B⊗x ; y = C·h
+        assert L == 1
+        dA = jnp.exp(dt[:, 0] * A[None, :])                 # (B,h)
+        dBx = jnp.einsum("bn,bhp,bh->bhpn", Bm[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32), dt[:, 0])
+        h = (ssm_state.astype(jnp.float32) * dA[..., None, None] + dBx)
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+        y = y[:, None].astype(x.dtype)
+        new_ssm = h
+    else:
+        y, new_ssm = ssd_scan(xs, dt, A, Bm, Cm, s.chunk_size, ssm_state)
+    y = y + xs * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, L, d_inner)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return (y @ params["out_proj"].astype(x.dtype),
+            (new_conv_x, new_conv_bc, new_ssm))

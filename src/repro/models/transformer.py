@@ -1,0 +1,382 @@
+"""Model assembly for every assigned architecture family.
+
+Families (``cfg.family``):
+- ``dense`` / ``vlm``:  llama3, qwen3 (qk-norm), phi3-{mini,medium},
+  qwen2-vl (M-RoPE + patch-embedding stub)
+- ``moe``:              qwen2-moe (shared+routed), deepseek-v3 (MLA + MoE + MTP)
+- ``ssm``:              mamba2 (SSD)
+- ``griffin``:          recurrentgemma (RG-LRU ×2 + local attention, per group)
+- ``encdec``:           whisper (conv-frontend stub → encoder; decoder with
+  cross-attention)
+
+All stacks scan over (stacked) layer params; ``cfg.remat`` wraps the scan
+body in jax.checkpoint.  Decode reads/writes the Tidehunter KV-WAL arena
+(repro.core.kvwal): the arena slice for each layer rides the scan's xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvwal
+from .base import ModelConfig
+from .griffin import init_recurrent_block, lru_width, recurrent_block
+from .layers import (apply_rope, attention, gqa_block, init_gqa, init_linear,
+                     init_mlp, mlp_block, mrope_angles, rms_norm, rope_angles,
+                     sinusoidal_embedding)
+from .mla import compress_kv, init_mla, mla_decode, mla_train
+from .moe import init_moe, moe_block
+from .ssm import init_ssm, ssm_block, ssm_dims
+
+
+# =========================================================== initialization
+def _stack_init(key, n: int, init_fn):
+    """Stacked layer params: vmap the per-layer init over n keys."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _dense_layer_init(cfg: ModelConfig, dtype):
+    def init(key):
+        ks = jax.random.split(key, 4)
+        p = {"ln1": jnp.ones((cfg.d_model,), dtype),
+             "ln2": jnp.ones((cfg.d_model,), dtype)}
+        if cfg.mla is not None:
+            p["attn"] = init_mla(ks[0], cfg, dtype)
+        else:
+            p["attn"] = init_gqa(ks[0], cfg, dtype)
+        if cfg.moe is not None:
+            p["moe"] = init_moe(ks[1], cfg.d_model, cfg.moe, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+        return p
+    return init
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = cfg.pdtype
+    ks = jax.random.split(key, 8)
+    p = {"embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model))
+                   * 0.02).astype(dtype),
+         "final_norm": jnp.ones((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_linear(ks[1], cfg.d_model, cfg.vocab, dtype)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        p["layers"] = _stack_init(ks[2], cfg.n_layers,
+                                  _dense_layer_init(cfg, dtype))
+        if cfg.mtp_depth:
+            mks = jax.random.split(ks[5], 3)
+            p["mtp"] = {
+                "proj": init_linear(mks[0], 2 * cfg.d_model, cfg.d_model, dtype),
+                "ln": jnp.ones((cfg.d_model,), dtype),
+                "layer": _mtp_layer_init(cfg, dtype)(mks[1]),
+            }
+    elif cfg.family == "ssm":
+        def init(key):
+            sk = jax.random.split(key, 2)
+            return {"ln1": jnp.ones((cfg.d_model,), dtype),
+                    "ssm": init_ssm(sk[0], cfg, dtype)}
+        p["layers"] = _stack_init(ks[2], cfg.n_layers, init)
+    elif cfg.family == "griffin":
+        period = len(cfg.griffin.pattern)
+        n_groups = cfg.n_layers // period
+        n_tail = cfg.n_layers - n_groups * period
+
+        def init_group(key):
+            gks = jax.random.split(key, period)
+            return {f"blk{i}": _griffin_block_init(cfg, dtype,
+                                                   cfg.griffin.pattern[i])(gks[i])
+                    for i in range(period)}
+        p["groups"] = _stack_init(ks[2], n_groups, init_group)
+        tks = jax.random.split(ks[3], max(n_tail, 1))
+        p["tail"] = [
+            _griffin_block_init(cfg, dtype, cfg.griffin.pattern[i % period])(tks[i])
+            for i in range(n_tail)]
+    elif cfg.family == "encdec":
+        def init_enc(key):
+            eks = jax.random.split(key, 2)
+            return {"ln1": jnp.ones((cfg.d_model,), dtype),
+                    "attn": init_gqa(eks[0], cfg, dtype),
+                    "ln2": jnp.ones((cfg.d_model,), dtype),
+                    "mlp": init_mlp(eks[1], cfg.d_model, cfg.d_ff, cfg.act,
+                                    dtype)}
+
+        def init_dec(key):
+            dks = jax.random.split(key, 3)
+            return {"ln1": jnp.ones((cfg.d_model,), dtype),
+                    "attn": init_gqa(dks[0], cfg, dtype),
+                    "ln_x": jnp.ones((cfg.d_model,), dtype),
+                    "xattn": init_gqa(dks[1], cfg, dtype, cross=True),
+                    "ln2": jnp.ones((cfg.d_model,), dtype),
+                    "mlp": init_mlp(dks[2], cfg.d_model, cfg.d_ff, cfg.act,
+                                    dtype)}
+        p["enc_layers"] = _stack_init(ks[2], cfg.n_encoder_layers, init_enc)
+        p["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+        p["layers"] = _stack_init(ks[3], cfg.n_layers, init_dec)
+        if cfg.encoder_dim and cfg.encoder_dim != cfg.d_model:
+            p["frontend_proj"] = init_linear(ks[4], cfg.encoder_dim,
+                                             cfg.d_model, dtype)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return p
+
+
+def _mtp_layer_init(cfg: ModelConfig, dtype):
+    """DeepSeek MTP module: one extra dense transformer layer."""
+    def init(key):
+        ks = jax.random.split(key, 2)
+        return {"ln1": jnp.ones((cfg.d_model,), dtype),
+                "attn": init_mla(ks[0], cfg, dtype) if cfg.mla is not None
+                else init_gqa(ks[0], cfg, dtype),
+                "ln2": jnp.ones((cfg.d_model,), dtype),
+                "mlp": init_mlp(ks[1], cfg.d_model,
+                                cfg.moe.shared_d_ff or cfg.moe.expert_d_ff
+                                if cfg.moe else cfg.d_ff, cfg.act, dtype)}
+    return init
+
+
+def _griffin_block_init(cfg: ModelConfig, dtype, kind: str):
+    def init(key):
+        ks = jax.random.split(key, 2)
+        p = {"ln1": jnp.ones((cfg.d_model,), dtype),
+             "ln2": jnp.ones((cfg.d_model,), dtype),
+             "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)}
+        if kind == "attn":
+            p["attn"] = init_gqa(ks[0], cfg, dtype)
+        else:
+            p["rec"] = init_recurrent_block(ks[0], cfg, dtype)
+        return p
+    return init
+
+
+# ============================================================= embeddings
+def param_count_exact(cfg: ModelConfig) -> int:
+    """Exact parameter count via abstract tracing — no allocation, works for
+    the 671B config.  Backs MODEL_FLOPS in the roofline analysis."""
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    import numpy as _np
+    return int(sum(_np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens) -> jax.Array:
+    return jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+
+
+def lm_logits(params, cfg: ModelConfig, x) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ params["embed"].astype(x.dtype).T
+    return x @ params["lm_head"].astype(x.dtype)
+
+
+def _angles(cfg: ModelConfig, positions, mrope_positions=None):
+    if cfg.family == "encdec":
+        return None, None
+    if cfg.mrope_sections is not None and mrope_positions is not None:
+        return mrope_angles(mrope_positions, cfg.hd, cfg.rope_theta,
+                            cfg.mrope_sections)
+    half_dim = cfg.hd if cfg.mla is None else cfg.mla.qk_rope_head_dim
+    return rope_angles(positions, half_dim, cfg.rope_theta)
+
+
+# ======================================================== dense/moe forward
+def maybe_shard_activations(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Optional with_sharding_constraint on (B,S,d) activations.
+
+    ``act_seq_axis`` gives Megatron-style sequence parallelism: the remat'd
+    per-layer residual shards over the model axis too, cutting checkpoint
+    memory by the TP degree (§Perf).  Requires a context mesh (set by the
+    launcher); silently a no-op outside one."""
+    if cfg.act_batch_axes is None and cfg.act_seq_axis is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    ba = cfg.act_batch_axes
+    spec = P(ba if ba and len(ba) > 1 else (ba[0] if ba else None),
+             cfg.act_seq_axis, None)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):          # no mesh context (CPU tests)
+        return x
+
+
+def _dense_layer_fwd(cfg: ModelConfig, layer_p, x, cos, sin):
+    x = maybe_shard_activations(cfg, x)
+    h = rms_norm(layer_p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        attn_out, _ = mla_train(layer_p["attn"], h, cfg, cos, sin)
+    else:
+        attn_out, _ = gqa_block(layer_p["attn"], h, cfg, cos=cos, sin=sin)
+    x = x + attn_out
+    h = rms_norm(layer_p["ln2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        ffn, aux = moe_block(layer_p["moe"], h, cfg.moe,
+                             dispatch_axes=cfg.moe_dispatch_axes)
+    else:
+        ffn, aux = mlp_block(layer_p["mlp"], h, cfg.act), jnp.float32(0)
+    return x + ffn, aux
+
+
+def forward(params, cfg: ModelConfig, tokens, *, vision_embed=None,
+            mrope_positions=None, frames=None) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward → (logits (B,S,V), aux_loss)."""
+    B, S = tokens.shape
+    x = embed_tokens(params, cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.family == "vlm" and vision_embed is not None:
+        # Frontend stub: precomputed patch embeddings replace the first
+        # n_vis token slots (DESIGN: modality frontend is a stub).
+        x = jax.lax.dynamic_update_slice(
+            x, vision_embed.astype(x.dtype), (0, 0, 0))
+    cos, sin = _angles(cfg, positions, mrope_positions)
+    aux_total = jnp.float32(0)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(carry, layer_p):
+            xc, aux = carry
+            xc, a = _dense_layer_fwd(cfg, layer_p, xc, cos, sin)
+            return (xc, aux + a), None
+        body = jax.checkpoint(body) if cfg.remat else body
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+    elif cfg.family == "ssm":
+        def body(carry, layer_p):
+            xc = maybe_shard_activations(cfg, carry)
+            h = rms_norm(layer_p["ln1"], xc, cfg.norm_eps)
+            out, _ = ssm_block(layer_p["ssm"], h, cfg)
+            return xc + out, None
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    elif cfg.family == "griffin":
+        x = _griffin_forward(params, cfg, x, cos, sin)
+    elif cfg.family == "encdec":
+        enc = encode(params, cfg, frames)
+        x = x + sinusoidal_embedding(positions, cfg.d_model).astype(x.dtype)
+        x = _whisper_decode_stack(params, cfg, x, enc, None)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(params, cfg, x), aux_total
+
+
+def _griffin_block_fwd(cfg, blk_p, x, cos, sin, kind):
+    x = maybe_shard_activations(cfg, x)
+    h = rms_norm(blk_p["ln1"], x, cfg.norm_eps)
+    if kind == "attn":
+        out, _ = gqa_block(blk_p["attn"], h, cfg, cos=cos, sin=sin,
+                           window=cfg.griffin.window)
+    else:
+        out, _ = recurrent_block(blk_p["rec"], h, cfg)
+    x = x + out
+    h = rms_norm(blk_p["ln2"], x, cfg.norm_eps)
+    return x + mlp_block(blk_p["mlp"], h, cfg.act)
+
+
+def _griffin_forward(params, cfg, x, cos, sin):
+    pattern = cfg.griffin.pattern
+
+    def body(xc, group_p):
+        for i, kind in enumerate(pattern):
+            xc = _griffin_block_fwd(cfg, group_p[f"blk{i}"], xc, cos, sin, kind)
+        return xc, None
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["groups"])
+    for i, blk_p in enumerate(params["tail"]):
+        x = _griffin_block_fwd(cfg, blk_p, x, cos, sin,
+                               pattern[i % len(pattern)])
+    return x
+
+
+def encode(params, cfg: ModelConfig, frames) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    x = frames.astype(cfg.adtype)
+    if "frontend_proj" in params:
+        x = x @ params["frontend_proj"].astype(x.dtype)
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = x + sinusoidal_embedding(pos, cfg.d_model).astype(x.dtype)
+
+    def body(xc, layer_p):
+        xc = maybe_shard_activations(cfg, xc)
+        h = rms_norm(layer_p["ln1"], xc, cfg.norm_eps)
+        out, _ = gqa_block(layer_p["attn"], h, cfg, cos=None, sin=None)
+        # encoder is bidirectional
+        xc = xc + out
+        h = rms_norm(layer_p["ln2"], xc, cfg.norm_eps)
+        return xc + mlp_block(layer_p["mlp"], h, cfg.act), None
+    enc_cfg_body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(enc_cfg_body, x, params["enc_layers"])
+    return rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _whisper_decode_stack(params, cfg, x, enc, cache_bundle):
+    """Decoder stack; cache_bundle carries (self-arena, table, lens, cross-kv)
+    for decode, or None for training (full attention)."""
+    def body(carry, scanned):
+        xc = maybe_shard_activations(cfg, carry)
+        layer_p = scanned
+        h = rms_norm(layer_p["ln1"], xc, cfg.norm_eps)
+        out, _ = gqa_block(layer_p["attn"], h, cfg)
+        xc = xc + out
+        h = rms_norm(layer_p["ln_x"], xc, cfg.norm_eps)
+        B, S, _ = h.shape
+        KH, hd = cfg.n_kv_heads, cfg.hd
+        k = (enc @ layer_p["xattn"]["wk"].astype(h.dtype)).reshape(
+            B, -1, KH, hd)
+        v = (enc @ layer_p["xattn"]["wv"].astype(h.dtype)).reshape(
+            B, -1, KH, hd)
+        out, _ = gqa_block(layer_p["xattn"], h, cfg, k_ext=k, v_ext=v)
+        xc = xc + out
+        h = rms_norm(layer_p["ln2"], xc, cfg.norm_eps)
+        return xc + mlp_block(layer_p["mlp"], h, cfg.act), None
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return x
+
+
+# ==================================================================== loss
+def train_loss(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    logits, aux = forward(
+        params, cfg, batch["tokens"],
+        vision_embed=batch.get("vision_embed"),
+        mrope_positions=batch.get("mrope_positions"),
+        frames=batch.get("frames"))
+    labels = batch["labels"]
+    loss = _xent(logits, labels, cfg)
+    if cfg.mtp_depth and cfg.family == "moe":
+        loss = loss + 0.3 * _mtp_loss(params, cfg, batch)
+    return loss + 0.01 * aux
+
+
+def _xent(logits, labels, cfg) -> jax.Array:
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def _mtp_loss(params, cfg: ModelConfig, batch) -> jax.Array:
+    """DeepSeek-style multi-token prediction: predict t+2 from a fused
+    representation of (hidden_t, embed(token_{t+1})) through one extra layer."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    x = maybe_shard_activations(cfg, embed_tokens(params, cfg, tokens))
+    # reuse the first layer's representation cheaply: embeddings only
+    nxt = jnp.roll(x, -1, axis=1)
+    h = jnp.concatenate([x, nxt], axis=-1) @ params["mtp"]["proj"].astype(x.dtype)
+    h = maybe_shard_activations(cfg, h)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = _angles(cfg, pos)
+    lp = params["mtp"]["layer"]
+    hh = rms_norm(lp["ln1"], h, cfg.norm_eps)
+    if cfg.mla is not None:
+        out, _ = mla_train(lp["attn"], hh, cfg, cos, sin)
+    else:
+        out, _ = gqa_block(lp["attn"], hh, cfg, cos=cos, sin=sin)
+    h = maybe_shard_activations(cfg, h + out)
+    hh = rms_norm(lp["ln2"], h, cfg.norm_eps)
+    h = h + mlp_block(lp["mlp"], hh, cfg.act)
+    h = rms_norm(params["mtp"]["ln"], maybe_shard_activations(cfg, h),
+                 cfg.norm_eps)
+    logits = lm_logits(params, cfg, h)
+    labels2 = jnp.roll(labels, -1, axis=1)
+    return _xent(logits, labels2, cfg)

@@ -1,0 +1,161 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds-per-step:
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_LINK_BW
+
+``cost_analysis()`` of the SPMD-partitioned executable reports *per-device*
+flops and bytes.  Collective bytes are not in cost_analysis: we parse the
+post-SPMD HLO (``compiled.as_text()``) and sum the result-shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction, scaled by loop trip counts when the
+instruction sits inside a rolled (scan) while-loop.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from . import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]+\d*)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,1024]' → bytes.  Tuple shapes: sum components."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum collective result bytes across the module, scaling instructions
+    inside while-loops by their trip count (scan over layers)."""
+    stats = CollectiveStats()
+    # Map computation name -> trip count for while loops:
+    # XLA prints scan loops with a known trip count in backend config or via
+    # constant comparisons; robust fallback: look for "known_trip_count"
+    trip_counts = {}
+    for m in re.finditer(
+            r'body=%?([\w.\-]+).*?known_trip_count.*?"n":"(\d+)"', hlo_text):
+        trip_counts[m.group(1)] = int(m.group(2))
+    # Assign each instruction to its enclosing computation.
+    current_comp = None
+    comp_mult = 1
+    for line in hlo_text.splitlines():
+        comp_m = re.match(r"\s*(%?[\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$", line) \
+            or re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s+\(", line)
+        if line.rstrip().endswith("{") and comp_m:
+            current_comp = comp_m.group(1).lstrip("%")
+            comp_mult = trip_counts.get(current_comp, 1)
+            continue
+        for kind in _COLLECTIVES:
+            # match '= TYPE[shape] kind(' — the instruction's result shape
+            m = re.search(r"=\s*((?:\([^)]*\))|(?:[a-z]+\d*\[[\d,]*\][^ ]*))\s*"
+                          + kind + r"[\s(.]", line)
+            if m:
+                b = _shape_bytes(m.group(1)) * comp_mult
+                stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+                stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) \
+                    + comp_mult
+                break
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    peak_memory_per_device: float
+    model_flops: float                 # 6·N·D (or 6·N_active·D)
+    collectives: dict = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / hw.ICI_LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def model_flops_ratio(self) -> float:
+        """useful FLOPs / compiled FLOPs (total across chips)."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-based MFU bound implied by the dominant term."""
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_step == 0:
+            return 0.0
+        return (self.model_flops / self.chips / t_step) / hw.PEAK_FLOPS_BF16
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 model_flops_ratio=self.model_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops(cfg, n_tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D for training, 2·N·D for inference forward;
+    MoE uses N_active."""
+    from repro.models import transformer as T
+    n = T.param_count_exact(cfg)
+    if cfg.moe is not None:
+        m = cfg.moe
+        routed_inactive = cfg.n_layers * 3 * cfg.d_model * m.expert_d_ff \
+            * (m.n_experts - m.top_k)
+        n = n - routed_inactive
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * n_tokens

@@ -1,0 +1,7 @@
+"""Hardware constants for the roofline model — TPU v5e (target platform)."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip, bf16
+HBM_BW = 819e9                # B/s per chip
+ICI_LINK_BW = 50e9            # B/s per link
+CHIPS_PER_POD = 256
+HBM_PER_CHIP = 16 * 1024**3   # 16 GiB

@@ -1,0 +1,146 @@
+"""Serving engine: continuous batching over the Tidehunter KV-WAL.
+
+The host side plays the paper's *asynchronous controller* role (§3.1):
+it allocates per-slot sequences, tracks which KV-WAL segments (blocks) are
+fully expired (requests finished, or sliding windows advanced past them),
+and recycles them — the device never copies a KV byte (C1/C5).
+
+Requests are queued, admitted into free batch slots, decoded step-by-step
+with greedy/temperature sampling, and retired on EOS or length budget;
+retirement is an epoch event: all the sequence's blocks expire at once.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import serve as serve_mod
+from repro.models import transformer as T
+from repro.models.base import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (len,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_submit: float = dataclasses.field(default_factory=time.time)
+    t_done: Optional[float] = None
+
+
+class ServingEngine:
+    """Batched decode over a fixed slot count (continuous batching)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_seq: int = 256, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.queue: collections.deque[Request] = collections.deque()
+        self.active: dict[int, Request] = {}        # slot -> request
+        self.cache = serve_mod.init_cache(cfg, batch_slots, max_seq)
+        self.rng = jax.random.PRNGKey(seed)
+        self.segments_recycled = 0
+        self._decode = jax.jit(
+            lambda p, c, t: serve_mod.decode_step(p, cfg, c, t))
+        self._prefill1 = jax.jit(
+            lambda p, b: serve_mod.prefill(p, cfg, b, max_seq=max_seq))
+
+    # ------------------------------------------------------------- client
+    def submit(self, prompt, max_new_tokens: int = 32, eos_id=None,
+               temperature: float = 0.0) -> Request:
+        req = Request(rid=len(self.queue) + len(self.active) + 1,
+                      prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      temperature=temperature)
+        self.queue.append(req)
+        return req
+
+    # -------------------------------------------------------------- admit
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if slot in self.active or not self.queue:
+                continue
+            req = self.queue.popleft()
+            self._prefill_into_slot(slot, req)
+            self.active[slot] = req
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        """Write the prompt's KV entries into the slot's arena region.
+
+        Single-sequence prefill into a one-slot batch, then splice the slot's
+        arena rows into the engine cache (append-once: rows are written at
+        their final position; they will never move).  The engine serves
+        dense/vlm/moe-family models (KV-WAL caches)."""
+        prompt = req.prompt[None, :]
+        logits, c1 = self._prefill1(self.params, {"tokens": prompt})
+        for key in ("arena_k", "arena_v"):
+            self.cache[key] = self.cache[key].at[:, slot].set(c1[key][:, 0])
+        self.cache["seq_lens"] = self.cache["seq_lens"].at[slot].set(
+            len(req.prompt))
+        self.cache["first_live"] = self.cache["first_live"].at[slot].set(0)
+        first = self._sample(np.asarray(logits)[0], req)
+        req.out_tokens.append(int(first))
+
+    def _sample(self, logits: np.ndarray, req: Request) -> int:
+        if req.temperature <= 0:
+            return int(np.argmax(logits))
+        self.rng, sub = jax.random.split(self.rng)
+        return int(jax.random.categorical(sub, jnp.asarray(
+            logits / req.temperature)))
+
+    # --------------------------------------------------------------- step
+    def step(self) -> int:
+        """One engine iteration: admit, decode one token for every active
+        slot, retire finished requests + recycle their segments."""
+        self._admit()
+        if not self.active:
+            return 0
+        tokens = np.zeros((self.slots,), np.int32)
+        for slot, req in self.active.items():
+            tokens[slot] = req.out_tokens[-1]
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens))
+        logits = np.asarray(logits)
+        finished = []
+        for slot, req in self.active.items():
+            tok = self._sample(logits[slot], req)
+            req.out_tokens.append(tok)
+            over = len(req.out_tokens) >= req.max_new_tokens
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if over or hit_eos:
+                finished.append(slot)
+        for slot in finished:
+            self._retire(slot)
+        return len(self.active) + len(finished)
+
+    def _retire(self, slot: int) -> None:
+        """Request completion = epoch expiry: every block of the slot dies
+        at once; the slot is recycled without moving any bytes."""
+        req = self.active.pop(slot)
+        req.done = True
+        req.t_done = time.time()
+        blocks_used = int(np.ceil(
+            float(self.cache["seq_lens"][slot]) / self.cfg.kv_block))
+        self.segments_recycled += blocks_used
+        self.cache["seq_lens"] = self.cache["seq_lens"].at[slot].set(0)
+        self.cache["first_live"] = self.cache["first_live"].at[slot].set(0)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return done

@@ -1,0 +1,56 @@
+"""Train / prefill / decode step factories used by the launcher and dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import serve as serve_mod
+from repro.models import transformer as T
+from repro.models.base import ModelConfig
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig,
+                    compress_grads=None):
+    """Returns train_step(params, opt_state, batch) → (params, opt_state,
+    metrics).  ``compress_grads`` optionally transforms the gradient pytree
+    (e.g. int8 quantize→psum→dequantize, distributed/compression.py)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(T.train_loss)(params, cfg, batch)
+        if compress_grads is not None:
+            grads = compress_grads(grads)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state, opt)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, batch):
+        return serve_mod.prefill(params, cfg, batch, max_seq=max_seq)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def step(params, cache, tokens, mrope_positions=None):
+        return serve_mod.decode_step(params, cfg, cache, tokens,
+                                     mrope_positions=mrope_positions)
+    return step
+
+
+def init_train_state(cfg: ModelConfig, opt: AdamWConfig, key):
+    params = T.init_params(cfg, key)
+    return params, adamw_init(params, opt)
+
+
+def abstract_train_state(cfg: ModelConfig, opt: AdamWConfig):
+    """ShapeDtypeStructs for params + optimizer state (no allocation)."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params = jax.eval_shape(lambda k: T.init_params(cfg, k), key)
+    opt_state = jax.eval_shape(lambda p: adamw_init(p, opt), params)
+    return params, opt_state

@@ -1,0 +1,244 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracles, with
+shape/dtype sweeps and hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.bloom_check.kernel import bloom_check
+from repro.kernels.bloom_check.ref import bloom_add_ref, bloom_check_ref
+from repro.kernels.optimistic_lookup.kernel import optimistic_lookup
+from repro.kernels.optimistic_lookup.ops import lookup_positions
+from repro.kernels.optimistic_lookup.ref import optimistic_lookup_ref
+from repro.kernels.tide_attention.kernel import tide_attention
+from repro.kernels.tide_attention.ref import tide_attention_ref
+
+SETTINGS = settings(max_examples=15, deadline=None,
+                    suppress_health_check=[HealthCheck.too_slow])
+
+
+def _mk_arena(key, B, NB, blk, KH, dk, dv, dtype):
+    ks = jax.random.split(key, 4)
+    ak = jax.random.normal(ks[0], (B, NB, blk, KH, dk), jnp.float32)
+    av = jax.random.normal(ks[1], (B, NB, blk, KH, dv), jnp.float32)
+    table = jnp.stack([
+        jax.random.permutation(jax.random.fold_in(ks[2], b), NB)
+        for b in range(B)]).astype(jnp.int32)
+    return ak.astype(dtype), av.astype(dtype), table
+
+
+class TestTideAttention:
+    @pytest.mark.parametrize("B,H,KH,dk,dv,NB,blk", [
+        (2, 8, 4, 64, 64, 4, 32),        # GQA
+        (1, 4, 1, 128, 128, 3, 128),     # MQA (griffin), MXU-aligned block
+        (3, 4, 4, 32, 32, 2, 16),        # MHA
+        (2, 16, 2, 64, 32, 5, 64),       # dk != dv
+    ])
+    def test_shapes_vs_ref(self, B, H, KH, dk, dv, NB, blk):
+        key = jax.random.PRNGKey(B * 131 + H)
+        q = jax.random.normal(key, (B, H, dk), jnp.float32)
+        ak, av, table = _mk_arena(key, B, NB, blk, KH, dk, dv, jnp.float32)
+        lens = jnp.asarray(
+            np.random.default_rng(0).integers(1, NB * blk + 1, B), jnp.int32)
+        live = jnp.zeros((B,), jnp.int32)
+        out = tide_attention(q, ak, av, table, lens, live, interpret=True)
+        ref = tide_attention_ref(q, ak, av, table, lens, live)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        key = jax.random.PRNGKey(3)
+        B, H, KH, dk, dv, NB, blk = 2, 8, 4, 64, 64, 4, 32
+        q = jax.random.normal(key, (B, H, dk), jnp.float32).astype(dtype)
+        ak, av, table = _mk_arena(key, B, NB, blk, KH, dk, dv, dtype)
+        lens = jnp.array([120, 77], jnp.int32)
+        live = jnp.array([0, 16], jnp.int32)
+        out = tide_attention(q, ak, av, table, lens, live, interpret=True)
+        ref = tide_attention_ref(q, ak, av, table, lens, live)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_epoch_pruning_matches_window(self):
+        """first_live masking == attending only to live segments."""
+        key = jax.random.PRNGKey(9)
+        B, H, KH, dk, dv, NB, blk = 2, 4, 2, 32, 32, 6, 16
+        q = jax.random.normal(key, (B, H, dk), jnp.float32)
+        ak, av, table = _mk_arena(key, B, NB, blk, KH, dk, dv, jnp.float32)
+        lens = jnp.array([90, 96], jnp.int32)
+        live = jnp.array([32, 48], jnp.int32)
+        out = tide_attention(q, ak, av, table, lens, live, interpret=True)
+        # oracle: physically zeroing pruned blocks must give the same result
+        ref = tide_attention_ref(q, ak, av, table, lens, live)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_sliding_window(self):
+        key = jax.random.PRNGKey(11)
+        B, H, KH, dk, dv, NB, blk = 2, 4, 4, 32, 32, 8, 16
+        q = jax.random.normal(key, (B, H, dk), jnp.float32)
+        ak, av, table = _mk_arena(key, B, NB, blk, KH, dk, dv, jnp.float32)
+        lens = jnp.array([128, 70], jnp.int32)
+        live = jnp.zeros((B,), jnp.int32)
+        for w in (16, 48, 100):
+            out = tide_attention(q, ak, av, table, lens, live, window=w,
+                                 interpret=True)
+            ref = tide_attention_ref(q, ak, av, table, lens, live, window=w)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-5, atol=2e-5)
+
+    @given(seed=st.integers(0, 2**31 - 1),
+           lens=st.lists(st.integers(1, 128), min_size=2, max_size=2))
+    @SETTINGS
+    def test_property_random_tables(self, seed, lens):
+        key = jax.random.PRNGKey(seed)
+        B, H, KH, dk, dv, NB, blk = 2, 4, 2, 32, 32, 4, 32
+        q = jax.random.normal(key, (B, H, dk), jnp.float32)
+        ak, av, table = _mk_arena(key, B, NB, blk, KH, dk, dv, jnp.float32)
+        lens = jnp.asarray(lens, jnp.int32)
+        live = jnp.zeros((B,), jnp.int32)
+        out = tide_attention(q, ak, av, table, lens, live, interpret=True)
+        ref = tide_attention_ref(q, ak, av, table, lens, live)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestOptimisticLookup:
+    @pytest.mark.parametrize("N,window", [
+        (1000, 128), (20000, 512), (50000, 2048), (300, 512),
+    ])
+    def test_vs_searchsorted(self, N, window):
+        rng = np.random.default_rng(N)
+        keys = np.unique(rng.integers(0, 2**32, N, dtype=np.uint32))
+        queries = np.concatenate([
+            rng.choice(keys, 64),
+            rng.integers(0, 2**32, 64, dtype=np.uint32)]).astype(np.uint32)
+        kj, qj = jnp.asarray(keys), jnp.asarray(queries)
+        idx, found, iters = optimistic_lookup(qj, kj, window=window,
+                                              interpret=True)
+        ridx, rfound = optimistic_lookup_ref(qj, kj)
+        resolved = np.asarray(idx) >= 0
+        assert resolved.mean() > 0.99     # uniform keys: resolves in budget
+        np.testing.assert_array_equal(np.asarray(found)[resolved],
+                                      np.asarray(rfound)[resolved])
+        hit = resolved & np.asarray(found)
+        np.testing.assert_array_equal(np.asarray(idx)[hit],
+                                      np.asarray(ridx)[hit])
+        assert float(np.asarray(iters)[resolved].mean()) <= 3.0  # paper §4.2
+
+    def test_ops_fallback_exact(self):
+        rng = np.random.default_rng(7)
+        keys = np.unique(rng.integers(0, 2**32, 5000, dtype=np.uint32))
+        # adversarial: clustered keys break the uniformity assumption
+        keys = np.unique(np.concatenate([keys, np.arange(
+            2**31, 2**31 + 4096, dtype=np.uint32)]))
+        queries = jnp.asarray(np.concatenate([
+            keys[:64], rng.integers(0, 2**32, 64, dtype=np.uint32)
+        ]).astype(np.uint32))
+        kj = jnp.asarray(keys)
+        pos = jnp.arange(len(keys), dtype=jnp.uint32) * 40
+        got, found = lookup_positions(queries, kj, pos, window=128,
+                                      max_iters=2)
+        ridx, rfound = optimistic_lookup_ref(queries, kj)
+        exp = np.where(np.asarray(rfound),
+                       np.asarray(pos)[np.clip(np.asarray(ridx), 0,
+                                               len(keys) - 1)], 0)
+        np.testing.assert_array_equal(np.asarray(got), exp)
+        np.testing.assert_array_equal(np.asarray(found), np.asarray(rfound))
+
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(10, 3000),
+           window=st.sampled_from([128, 512]))
+    @SETTINGS
+    def test_property(self, seed, n, window):
+        rng = np.random.default_rng(seed)
+        keys = np.unique(rng.integers(0, 2**32, n, dtype=np.uint32))
+        queries = jnp.asarray(np.concatenate([
+            rng.choice(keys, 16), rng.integers(0, 2**32, 16,
+                                               dtype=np.uint32)
+        ]).astype(np.uint32))
+        pos = jnp.arange(len(keys), dtype=jnp.uint32) + 7
+        got, found = lookup_positions(queries, jnp.asarray(keys), pos,
+                                      window=window)
+        ridx, rfound = optimistic_lookup_ref(queries, jnp.asarray(keys))
+        np.testing.assert_array_equal(np.asarray(found), np.asarray(rfound))
+        exp = np.where(np.asarray(rfound),
+                       np.asarray(pos)[np.clip(np.asarray(ridx), 0,
+                                               len(keys) - 1)], 0)
+        np.testing.assert_array_equal(np.asarray(got), exp)
+
+
+class TestBloomCheck:
+    @pytest.mark.parametrize("nwords,nadd,k", [(64, 20, 7), (256, 100, 7),
+                                               (1024, 500, 5)])
+    def test_vs_ref_no_false_negatives(self, nwords, nadd, k):
+        rng = np.random.default_rng(nwords)
+        bits = jnp.zeros((nwords,), jnp.uint32)
+        h1a = jnp.asarray(rng.integers(0, 2**32, nadd, dtype=np.uint32))
+        h2a = jnp.asarray(rng.integers(0, 2**32, nadd, dtype=np.uint32) | 1)
+        bits = bloom_add_ref(h1a, h2a, bits, k=k)
+        h1q = jnp.concatenate([h1a, jnp.asarray(
+            rng.integers(0, 2**32, 200, dtype=np.uint32))])
+        h2q = jnp.concatenate([h2a, jnp.asarray(
+            rng.integers(0, 2**32, 200, dtype=np.uint32) | 1)])
+        out = bloom_check(h1q, h2q, bits, k=k, interpret=True)
+        ref = bloom_check_ref(h1q, h2q, bits, k=k)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        assert bool(jnp.all(out[:nadd]))          # no false negatives
+        assert float(jnp.mean(out[nadd:])) < 0.35  # bounded false positives
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @SETTINGS
+    def test_property(self, seed):
+        rng = np.random.default_rng(seed)
+        bits = jnp.zeros((128,), jnp.uint32)
+        h1 = jnp.asarray(rng.integers(0, 2**32, 30, dtype=np.uint32))
+        h2 = jnp.asarray(rng.integers(0, 2**32, 30, dtype=np.uint32) | 1)
+        bits = bloom_add_ref(h1, h2, bits)
+        out = bloom_check(h1, h2, bits, interpret=True)
+        assert bool(jnp.all(out))
+
+
+class TestSsdScan:
+    def _inputs(self, key, b, l, h, p, n):
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (b, l, n)) * 0.5
+        Cm = jax.random.normal(ks[4], (b, l, n)) * 0.5
+        return x, dt, A, Bm, Cm
+
+    @pytest.mark.parametrize("b,l,h,p,n,c", [
+        (2, 64, 8, 16, 32, 16),
+        (1, 128, 4, 64, 128, 32),     # production-like head/state dims
+        (3, 48, 8, 16, 16, 16),
+        (2, 40, 4, 16, 32, 16),       # padding path via ops wrapper
+    ])
+    def test_vs_ref(self, b, l, h, p, n, c):
+        from repro.kernels.ssd_scan.ops import ssd
+        from repro.kernels.ssd_scan.ref import ssd_scan_ref
+        x, dt, A, Bm, Cm = self._inputs(jax.random.PRNGKey(l), b, l, h, p, n)
+        y, st = ssd(x, dt, A, Bm, Cm, chunk=c)
+        yr, sr = ssd_scan_ref(x, dt, A, Bm, Cm, c)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(sr),
+                                   rtol=3e-4, atol=3e-4)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @SETTINGS
+    def test_property(self, seed):
+        from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+        from repro.kernels.ssd_scan.ref import ssd_scan_ref
+        x, dt, A, Bm, Cm = self._inputs(jax.random.PRNGKey(seed),
+                                        2, 32, 4, 8, 16)
+        y, stt = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=8, interpret=True)
+        yr, sr = ssd_scan_ref(x, dt, A, Bm, Cm, 8)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(stt), np.asarray(sr),
+                                   rtol=3e-4, atol=3e-4)

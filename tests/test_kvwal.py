@@ -1,0 +1,85 @@
+"""Device KV-WAL unit tests: append-once semantics, table indirection,
+segment pruning, and the launchers' happy paths."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kvwal
+
+
+def test_append_token_writes_allocated_slot():
+    spec = kvwal.KVWalSpec(n_layers=1, batch=3, max_seq=64, kv_heads=2,
+                           entry_dim=4, block_size=8)
+    cache = kvwal.init_cache(spec)
+    arena = cache["arena"][0]
+    lens = jnp.array([0, 9, 17], jnp.int32)
+    entry = jnp.arange(3 * 2 * 4, dtype=jnp.float32).reshape(3, 2, 4)
+    out = kvwal.append_token(arena, cache["table"], lens, entry)
+    # seq 0 → block 0 off 0; seq 1 → block 1 off 1; seq 2 → block 2 off 1
+    np.testing.assert_array_equal(np.asarray(out[0, 0, 0]),
+                                  np.asarray(entry[0]))
+    np.testing.assert_array_equal(np.asarray(out[1, 1, 1]),
+                                  np.asarray(entry[1]))
+    np.testing.assert_array_equal(np.asarray(out[2, 2, 1]),
+                                  np.asarray(entry[2]))
+    # append-once: all other slots untouched (zero)
+    assert float(jnp.abs(out).sum()) == pytest.approx(
+        float(jnp.abs(entry).sum()), rel=1e-6)
+
+
+def test_gather_follows_permuted_table():
+    spec = kvwal.KVWalSpec(n_layers=1, batch=2, max_seq=32, kv_heads=1,
+                           entry_dim=2, block_size=8)
+    arena = jnp.arange(2 * 4 * 8 * 1 * 2, dtype=jnp.float32).reshape(
+        2, 4, 8, 1, 2)
+    table = jnp.array([[2, 0, 3, 1], [0, 1, 2, 3]], jnp.int32)
+    g = kvwal.gather(arena, table)
+    np.testing.assert_array_equal(np.asarray(g[0, :8]),
+                                  np.asarray(arena[0, 2].reshape(8, 1, 2)))
+    np.testing.assert_array_equal(np.asarray(g[1, 8:16]),
+                                  np.asarray(arena[1, 1].reshape(8, 1, 2)))
+
+
+def test_prune_and_free_blocks():
+    spec = kvwal.KVWalSpec(n_layers=1, batch=2, max_seq=64, kv_heads=1,
+                           entry_dim=2, block_size=8)
+    cache = kvwal.init_cache(spec)
+    cache = kvwal.prune_below(cache, jnp.array([20, 7], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(cache["first_live"]), [16, 0])
+    np.testing.assert_array_equal(np.asarray(kvwal.free_blocks(cache)),
+                                  [2, 0])
+    # watermark is monotonic
+    cache = kvwal.prune_below(cache, jnp.array([8, 8], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(cache["first_live"]), [16, 8])
+
+
+def test_write_prefill_pads_partial_block():
+    spec = kvwal.KVWalSpec(n_layers=1, batch=1, max_seq=32, kv_heads=1,
+                           entry_dim=2, block_size=8)
+    arena = jnp.zeros(spec.arena_shape()[1:], jnp.float32)
+    entries = jnp.ones((1, 11, 1, 2), jnp.float32)
+    out = kvwal.write_prefill(arena, entries)
+    assert float(out.sum()) == 11 * 2
+    np.testing.assert_array_equal(np.asarray(out[0, 1, 3:]).sum(), 0)
+
+
+@pytest.mark.parametrize("module,args", [
+    ("repro.launch.train", ["--arch", "qwen3-0.6b", "--smoke",
+                            "--steps", "6", "--checkpoint-every", "3"]),
+    ("repro.launch.serve", ["--arch", "qwen3-0.6b", "--smoke",
+                            "--requests", "3", "--slots", "2",
+                            "--max-seq", "48", "--max-new-tokens", "4"]),
+])
+def test_launchers_smoke(module, args, tmp_path):
+    import os
+    env = dict(os.environ, PYTHONPATH="src")
+    if module.endswith("train"):
+        args = args + ["--ckpt-dir", str(tmp_path / "ckpt")]
+    r = subprocess.run([sys.executable, "-m", module] + args,
+                       capture_output=True, text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "[train]" in r.stdout or "[serve]" in r.stdout

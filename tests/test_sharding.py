@@ -1,0 +1,80 @@
+"""Sharding rules: every arch × mode yields divisibility-valid specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs.registry import ARCH_IDS, SHAPES, get_config, input_specs
+from repro.distributed import sharding
+from repro.models import serve as serve_mod
+from repro.training.optimizer import AdamWConfig
+from repro.training.step import abstract_train_state
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _axis_size(mesh, entry):
+    if entry is None:
+        return 1
+    axes = (entry,) if isinstance(entry, str) else entry
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _check(tree_specs, tree_shapes, mesh):
+    leaves_s = jax.tree.leaves(tree_specs,
+                               is_leaf=lambda x: isinstance(x, P))
+    leaves_a = jax.tree.leaves(tree_shapes)
+    assert len(leaves_s) == len(leaves_a)
+    for spec, leaf in zip(leaves_s, leaves_a):
+        assert len(spec) <= len(leaf.shape), (spec, leaf.shape)
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            n = _axis_size(mesh, entry)
+            assert dim % n == 0, \
+                f"dim {dim} not divisible by {entry} ({n}) in {spec}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mode", ["tp", "fsdp"])
+@pytest.mark.parametrize("mesh", [MESH, MESH_MP], ids=["1pod", "2pod"])
+def test_param_specs_divisible(arch, mode, mesh):
+    cfg = get_config(arch)
+    params_abs, opt_abs = abstract_train_state(cfg, AdamWConfig())
+    specs = sharding.param_specs(params_abs, mesh, mode=mode)
+    _check(specs, params_abs, mesh)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    cache = serve_mod.cache_spec(cfg, 128, 4096 + 256)
+    specs = sharding.cache_specs_tree(cache, MESH)
+    _check(specs, cache, MESH)
+
+
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_divisible(shape_name):
+    cfg = get_config("llama3-8b")
+    specs_in = input_specs(cfg, SHAPES[shape_name])
+    tree = sharding.input_specs_tree(specs_in, MESH)
+    _check(tree, specs_in, MESH)
+
+
+def test_kv_head_rule():
+    """DESIGN §5: kv_heads if divisible, else entry dim, else replicate."""
+    assert sharding.kv_head_axis_dims(16, 128, MESH) == ("model", None)
+    assert sharding.kv_head_axis_dims(8, 128, MESH) == (None, "model")
+    assert sharding.kv_head_axis_dims(10, 100, MESH) == (None, None)
+
+
+def test_fsdp_avoids_contracting_dim_for_experts():
+    """Regression for §Perf A1/B2: expert weights shard E→model and the
+    OUTPUT dim→data, never the contracting d_model dim."""
+    cfg = get_config("deepseek-v3-671b")
+    params_abs, _ = abstract_train_state(cfg, AdamWConfig())
+    specs = sharding.param_specs(params_abs, MESH, mode="fsdp")
+    gate = specs["layers"]["moe"]["we_gate"]    # (L, E, d, ff)
+    assert tuple(gate) == (None, "model", None, "data")
+    down = specs["layers"]["moe"]["we_down"]    # (L, E, ff, d)
+    assert tuple(down) == (None, "model", None, "data")
