@@ -67,6 +67,22 @@ def zipf_indices(n_keys: int, n_ops: int, theta: float,
     return n_keys - 1 - rng.choice(n_keys, size=n_ops, p=w)
 
 
+def multi_get(db, keys):
+    """Batched get where the engine supports it; scalar loop otherwise —
+    the exact baseline the batched pipeline is measured against."""
+    fn = getattr(db, "multi_get", None)
+    if fn is not None:
+        return fn(keys)
+    return [db.get(k) for k in keys]
+
+
+def multi_exists(db, keys):
+    fn = getattr(db, "multi_exists", None)
+    if fn is not None:
+        return fn(keys)
+    return [db.exists(k) for k in keys]
+
+
 class Bench:
     def __init__(self, name: str, factory):
         self.name = name

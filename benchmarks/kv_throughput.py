@@ -3,12 +3,18 @@
 Engines: tidehunter, rocksdb(sim), blobdb(sim).  Value sizes 64/128/1024 B;
 workloads: 100% write, 50/50 mixed, 100% read (get + exists); skew θ∈{0,2}.
 Reports ops/s and the engine write-amplification counters.
+
+``run_batched`` measures the batched read pipeline (§3.2 batched:
+``multi_get``/``multi_exists`` through the Bloom + optimistic-lookup Pallas
+kernels with coalesced WAL preads) against the equivalent scalar-get loop,
+reporting batch-size-vs-throughput and the speedup ratio.
 """
 from __future__ import annotations
 
 import time
 
-from .engines import ENGINES, Bench, gen_keys, zipf_indices
+from .engines import (ENGINES, Bench, gen_keys, multi_exists, multi_get,
+                      zipf_indices)
 
 
 def run(n_keys: int = 6000, n_ops: int = 4000, csv=print) -> None:
@@ -56,3 +62,79 @@ def run(n_keys: int = 6000, n_ops: int = 4000, csv=print) -> None:
                 csv(f"{tag}.exists,{e_s/n_ops*1e6:.2f},{n_ops/e_s:.0f} ops/s")
                 csv(f"{tag}.write_amp,{wa:.2f},fill={fill_s:.1f}s")
                 b.close()
+
+
+def _clear_cache(db) -> None:
+    cache = getattr(db, "cache", None)
+    if cache is not None and hasattr(cache, "clear"):
+        cache.clear()
+
+
+def run_batched(n_keys: int = 6000, n_ops: int = 2048, value_size: int = 128,
+                theta: float = 0.0, csv=print,
+                batch_sizes=(16, 64, 256, 1024)) -> dict:
+    """Batch-size-vs-throughput for the batched read pipeline.
+
+    For each engine and batch size B: time ``n_ops`` point reads issued as
+    N scalar ``get`` calls, then the same reads as ``multi_get`` calls of B
+    keys, and report both plus the speedup.  Likewise for existence checks
+    (half present keys, half misses — the Bloom short-circuit path).
+    Returns ``{engine: {batch: speedup}}`` so tests can assert the ≥2×
+    acceptance bar without re-parsing CSV.
+    """
+    speedups: dict = {}
+    for name, factory in ENGINES.items():
+        b = Bench(name, factory)
+        keys = gen_keys(n_keys, seed=13)
+        b.fill(keys, value_size)
+        idx = zipf_indices(n_keys, n_ops, theta, seed=11)
+        miss = gen_keys(n_ops // 2, seed=99)       # never inserted
+        exists_probe = [keys[i] for i in idx[:n_ops // 2]] + miss
+        tag = f"kvbatch.v{value_size}.t{int(theta)}.{name}"
+        speedups[name] = {}
+
+        # Warm the jit caches at every batch size so one-off compile time is
+        # not in the timed region (deployments warm once, serve forever).
+        for bs in batch_sizes:
+            multi_get(b.db, [keys[i] for i in idx[:min(bs, n_ops)]])
+            multi_exists(b.db, exists_probe[:bs])
+
+        _clear_cache(b.db)
+        t0 = time.perf_counter()
+        for i in idx:
+            b.db.get(keys[i])
+        scalar_get_s = time.perf_counter() - t0
+
+        _clear_cache(b.db)
+        t0 = time.perf_counter()
+        for i in idx:
+            b.db.exists(keys[i])
+        scalar_exists_s = time.perf_counter() - t0
+
+        csv(f"{tag}.scalar_get,{scalar_get_s/n_ops*1e6:.2f},"
+            f"{n_ops/scalar_get_s:.0f} ops/s")
+        csv(f"{tag}.scalar_exists,{scalar_exists_s/n_ops*1e6:.2f},"
+            f"{n_ops/scalar_exists_s:.0f} ops/s")
+
+        for bs in batch_sizes:
+            _clear_cache(b.db)
+            t0 = time.perf_counter()
+            for off in range(0, n_ops, bs):
+                multi_get(b.db, [keys[i] for i in idx[off:off + bs]])
+            g_s = time.perf_counter() - t0
+
+            _clear_cache(b.db)
+            t0 = time.perf_counter()
+            for off in range(0, len(exists_probe), bs):
+                multi_exists(b.db, exists_probe[off:off + bs])
+            e_s = time.perf_counter() - t0
+
+            sp_get = scalar_get_s / g_s
+            sp_ex = scalar_exists_s / e_s
+            speedups[name][bs] = sp_get
+            csv(f"{tag}.multi_get.b{bs},{g_s/n_ops*1e6:.2f},"
+                f"{n_ops/g_s:.0f} ops/s ({sp_get:.1f}x scalar)")
+            csv(f"{tag}.multi_exists.b{bs},{e_s/len(exists_probe)*1e6:.2f},"
+                f"{len(exists_probe)/e_s:.0f} ops/s ({sp_ex:.1f}x scalar)")
+        b.close()
+    return speedups

@@ -25,7 +25,8 @@ def main() -> None:
             db.put(key, f"payload-{i}".encode() + bytes(1024),
                    keyspace="objects", epoch=i // 1000)
 
-        key = hashlib.sha256(b"object-1234").digest()
+        # probe a key from epoch 4: it must survive the epoch-<3 prune below
+        key = hashlib.sha256(b"object-4234").digest()
         print("get:", db.get(key, keyspace="objects")[:12])
         print("exists:", db.exists(key, keyspace="objects"))
 

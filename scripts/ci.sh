@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 gate: install dev deps and run the full suite.  A red suite (or a
+# collection error) exits non-zero, so it can't land again.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -r requirements-dev.txt || \
+    echo "warn: dev deps not installed (offline?); property tests will skip"
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,8 +1,13 @@
 """Per-cell Bloom filters for negative-lookup short-circuiting (§3.2 step 2).
 
 The paper resolves ``exists`` queries from memory without touching the index
-or the Value WAL; this is the 15.6× existence-check win.  We use a flat numpy
-bitset with k derived hash probes from a single blake2b digest.
+or the Value WAL; this is the 15.6× existence-check win.  The bitset is a
+flat uint32 word array with k double-hashed probes — **bit-identical** to the
+``kernels/bloom_check`` Pallas kernel's layout and probe arithmetic
+(``idx_i = (h1 + i·h2) mod 2³² mod nbits``, word = idx>>5, bit = idx&31), so
+a batch of queries can be tested either host-side (numpy) or through the
+kernel's ops wrapper with exactly the same answers — no false negatives can
+be introduced by switching paths.
 """
 from __future__ import annotations
 
@@ -10,36 +15,92 @@ import hashlib
 
 import numpy as np
 
+# Below this many queries the jitted kernel's dispatch overhead dominates;
+# the numpy path computes the identical answer in a few microseconds.
+_KERNEL_MIN_BATCH = 64
+
+
+def key_hashes(key: bytes) -> tuple[int, int]:
+    """(h1, h2) uint32 halves for one key; h2 forced odd (double hashing)."""
+    d = hashlib.blake2b(key, digest_size=8).digest()
+    return (int.from_bytes(d[:4], "little"),
+            int.from_bytes(d[4:], "little") | 1)
+
+
+def key_hashes_many(keys) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized ``key_hashes``: (h1 (Q,) u32, h2 (Q,) u32)."""
+    n = len(keys)
+    h1 = np.empty(n, dtype=np.uint32)
+    h2 = np.empty(n, dtype=np.uint32)
+    for i, k in enumerate(keys):
+        d = hashlib.blake2b(k, digest_size=8).digest()
+        h1[i] = int.from_bytes(d[:4], "little")
+        h2[i] = int.from_bytes(d[4:], "little") | 1
+    return h1, h2
+
 
 class BloomFilter:
     __slots__ = ("bits", "nbits", "k")
 
     def __init__(self, expected_entries: int, bits_per_key: int = 10, k: int = 7):
-        nbits = max(64, expected_entries * bits_per_key)
+        # Round the modulus up to a power of two: probe arithmetic is
+        # unchanged and the false-positive rate only improves, but every
+        # filter size now lands in one of ~log2(max cell count) buckets, so
+        # the bloom_check kernel wrapper (where nbits is a static compile
+        # argument) keeps a bounded jit cache across cells of varying size.
+        raw = max(64, expected_entries * bits_per_key)
+        nbits = 1 << (raw - 1).bit_length()
         self.nbits = nbits
         self.k = k
-        self.bits = np.zeros((nbits + 63) // 64, dtype=np.uint64)
+        self.bits = np.zeros((nbits + 31) // 32, dtype=np.uint32)
 
-    def _probes(self, key: bytes) -> np.ndarray:
-        d = hashlib.blake2b(key, digest_size=16).digest()
-        h1 = int.from_bytes(d[:8], "little")
-        h2 = int.from_bytes(d[8:], "little") | 1
-        idx = (h1 + np.arange(self.k, dtype=np.uint64) * np.uint64(h2 & 0xFFFFFFFFFFFFFFFF))
-        return (idx % np.uint64(self.nbits)).astype(np.uint64)
+    def _probe_idx(self, h1: np.ndarray, h2: np.ndarray) -> np.ndarray:
+        """(Q,) hash halves → (k, Q) probe bit indices, u32 wraparound."""
+        i = np.arange(self.k, dtype=np.uint32)[:, None]
+        return (h1[None, :] + i * h2[None, :]) % np.uint32(self.nbits)
 
     def add(self, key: bytes) -> None:
-        p = self._probes(key)
-        np.bitwise_or.at(self.bits, (p >> np.uint64(6)).astype(np.int64),
-                         np.uint64(1) << (p & np.uint64(63)))
+        h1, h2 = key_hashes(key)
+        idx = self._probe_idx(np.uint32([h1]), np.uint32([h2]))
+        np.bitwise_or.at(self.bits, (idx >> np.uint32(5)).astype(np.int64),
+                         np.uint32(1) << (idx & np.uint32(31)))
+
+    def add_many(self, keys) -> None:
+        if not len(keys):
+            return
+        h1, h2 = key_hashes_many(keys)
+        idx = self._probe_idx(h1, h2)
+        np.bitwise_or.at(self.bits, (idx >> np.uint32(5)).astype(np.int64),
+                         np.uint32(1) << (idx & np.uint32(31)))
 
     def might_contain(self, key: bytes) -> bool:
-        p = self._probes(key)
-        words = self.bits[(p >> np.uint64(6)).astype(np.int64)]
-        return bool(np.all((words >> (p & np.uint64(63))) & np.uint64(1)))
+        h1, h2 = key_hashes(key)
+        idx = self._probe_idx(np.uint32([h1]), np.uint32([h2]))
+        words = self.bits[(idx >> np.uint32(5)).astype(np.int64)]
+        return bool(np.all((words >> (idx & np.uint32(31))) & np.uint32(1)))
 
-    def add_many(self, keys: list[bytes]) -> None:
-        for k in keys:
-            self.add(k)
+    def might_contain_many(self, keys, h1: np.ndarray | None = None,
+                           h2: np.ndarray | None = None,
+                           use_kernel: bool = True) -> np.ndarray:
+        """Vectorized membership for a batch of keys → (Q,) bool.
+
+        Large batches route through the ``bloom_check`` kernel ops wrapper
+        (one gather + bit-test per probe, no per-query control flow); small
+        batches take the equivalent numpy path to skip jit dispatch.
+        Precomputed (h1, h2) arrays may be passed to amortize hashing across
+        the cells of one multi-key read.
+        """
+        if h1 is None or h2 is None:
+            if not len(keys):
+                return np.zeros(0, dtype=bool)
+            h1, h2 = key_hashes_many(keys)
+        if use_kernel and len(h1) >= _KERNEL_MIN_BATCH:
+            from repro.kernels.bloom_check.ops import might_contain_batch
+            return might_contain_batch(h1, h2, self.bits, k=self.k,
+                                       nbits=self.nbits)
+        idx = self._probe_idx(h1, h2)
+        words = self.bits[(idx >> np.uint32(5)).astype(np.int64)]
+        return np.all((words >> (idx & np.uint32(31))) & np.uint32(1), axis=0)
 
     @property
     def nbytes(self) -> int:

@@ -20,18 +20,40 @@ class LruCache:
                 self._data.move_to_end(key)
             return v
 
+    def get_many(self, keys) -> list[Optional[bytes]]:
+        """Batched lookup under one lock acquisition (order-aligned)."""
+        with self._lock:
+            out = []
+            for key in keys:
+                v = self._data.get(key)
+                if v is not None:
+                    self._data.move_to_end(key)
+                out.append(v)
+            return out
+
+    def put_many(self, items) -> None:
+        """Single cache fill for a batch of (key, value) pairs."""
+        if self.capacity <= 0 or not items:
+            return
+        with self._lock:
+            for key, value in items:
+                self._put_locked(key, value)
+
     def put(self, key: bytes, value: bytes) -> None:
         if self.capacity <= 0:
             return
         with self._lock:
-            old = self._data.pop(key, None)
-            if old is not None:
-                self._size -= len(old) + len(key)
-            self._data[key] = value
-            self._size += len(value) + len(key)
-            while self._size > self.capacity and self._data:
-                k, v = self._data.popitem(last=False)
-                self._size -= len(v) + len(k)
+            self._put_locked(key, value)
+
+    def _put_locked(self, key: bytes, value: bytes) -> None:
+        old = self._data.pop(key, None)
+        if old is not None:
+            self._size -= len(old) + len(key)
+        self._data[key] = value
+        self._size += len(value) + len(key)
+        while self._size > self.capacity and self._data:
+            k, v = self._data.popitem(last=False)
+            self._size -= len(v) + len(k)
 
     def invalidate(self, key: bytes) -> None:
         with self._lock:

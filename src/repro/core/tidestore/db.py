@@ -42,6 +42,8 @@ class DbConfig:
     relocation: bool = False               # background relocator thread
     relocation_interval_s: float = 1.0
     mem_budget_entries: int = 2_000_000    # Large Table residency budget
+    batched_kernels: bool = True           # route multi_get/multi_exists
+                                           # through the Pallas kernel wrappers
 
 
 class TideDB:
@@ -207,6 +209,89 @@ class TideDB:
             self.metrics.add(cache_hits=1)
             return True
         return self.table.exists(ks_id, key, self.value_wal.first_live_pos)
+
+    # -------------------------------------------------------- batched reads
+    def multi_get(self, keys, keyspace=0) -> list:
+        """Batched point lookups (§3.2, batched): resolve a whole batch of
+        keys in one pipeline pass — one cache sweep, grouped per-cell index
+        resolution (Bloom pass + one vectorized lookup across resident cell
+        blobs), coalesced position-sorted WAL preads, and a single cache
+        fill at the end.  Returns values aligned with ``keys`` (``None`` =
+        absent/deleted).  Equivalent to ``[db.get(k) for k in keys]``,
+        measured ≥2× faster at batch sizes ≥256 (benchmarks/kv_throughput).
+        """
+        if not keys:
+            return []
+        ks_id = self._ks_id(keyspace)
+        self.metrics.add(batched_read_keys=len(keys))
+        results: list = [None] * len(keys)
+        cks = [self._cache_key(ks_id, k) for k in keys]
+        cached = self.cache.get_many(cks)
+        miss_idx = [i for i, v in enumerate(cached) if v is None]
+        for i, v in enumerate(cached):
+            if v is not None:
+                results[i] = v
+        self.metrics.add(cache_hits=len(keys) - len(miss_idx),
+                         cache_misses=len(miss_idx))
+        if not miss_idx:
+            return results
+        markers = self.table.get_positions_batch(
+            ks_id, [keys[i] for i in miss_idx],
+            use_kernel=self.cfg.batched_kernels)
+        want: dict[int, list[int]] = {}
+        for i, marker in zip(miss_idx, markers):
+            if marker is None or is_tombstone(marker):
+                continue
+            pos = real_pos(marker)
+            if pos < self.value_wal.first_live_pos:
+                continue                 # epoch-pruned
+            want.setdefault(pos, []).append(i)
+        records = self.value_wal.read_records_batch(want) if want else {}
+        fills = []
+        for pos, slots in want.items():
+            rec = records.get(pos)
+            if rec is None:
+                # Relocated underneath us: the scalar path re-resolves.
+                for i in slots:
+                    results[i] = self.get(keys[i], keyspace)
+                continue
+            rtype, payload = rec
+            if rtype == T_TOMBSTONE:
+                continue
+            _, _, value, _ = decode_entry(payload)
+            for i in slots:
+                results[i] = value
+                fills.append((cks[i], value))
+        self.cache.put_many(fills)       # single cache fill at the end
+        return results
+
+    def multi_exists(self, keys, keyspace=0) -> list:
+        """Batched existence checks resolved entirely from index state —
+        the 15.6× op (§3.2), vectorized: one cache sweep, then per-cell
+        Bloom passes over precomputed hashes and one batched Large Table
+        resolution.  Never touches the Value WAL.  Equivalent to
+        ``[db.exists(k) for k in keys]``."""
+        if not keys:
+            return []
+        ks_id = self._ks_id(keyspace)
+        self.metrics.add(batched_read_keys=len(keys))
+        results = [False] * len(keys)
+        cached = self.cache.get_many([self._cache_key(ks_id, k) for k in keys])
+        miss_idx = [i for i, v in enumerate(cached) if v is None]
+        for i, v in enumerate(cached):
+            if v is not None:
+                results[i] = True
+        self.metrics.add(cache_hits=len(keys) - len(miss_idx))
+        if not miss_idx:
+            return results
+        markers = self.table.get_positions_batch(
+            ks_id, [keys[i] for i in miss_idx],
+            use_kernel=self.cfg.batched_kernels)
+        min_live = self.value_wal.first_live_pos
+        for i, marker in zip(miss_idx, markers):
+            results[i] = (marker is not None and not is_tombstone(marker)
+                          and real_pos(marker) >= min_live)
+        return results
 
     def prev(self, key: bytes, keyspace=0) -> Optional[tuple[bytes, bytes]]:
         """Reverse iterator step: largest (key', value) with key' < key."""

@@ -304,3 +304,32 @@ FORMATS = {
     "optimistic": (serialize_optimistic, OptimisticLookup, load_optimistic),
     "header": (serialize_header, HeaderLookup, load_header),
 }
+
+# Byte offset of the sorted entry region within each format's blob.
+BLOB_OFFSETS = {"optimistic": 0, "header": _HEADER_FMT.size}
+
+
+def load_blob_arrays(pread: Callable[[int, int], bytes], count: int,
+                     key_len: int, fmt: str = "optimistic"):
+    """Read a cell's complete sorted entry region in ONE positional read.
+
+    The batched read path (``TideDB.multi_get``) amortizes a single blob
+    read across every query hitting the cell, instead of per-key windowed
+    lookups.  Returns (buf, n) — raw entry bytes and how many complete
+    entries were actually read (short reads surface as n < count and the
+    caller falls back to the per-key path).
+    """
+    esz = entry_size(key_len)
+    buf = pread(BLOB_OFFSETS[fmt], count * esz)
+    return buf, min(count, len(buf) // esz)
+
+
+def u32_prefixes(cols: np.ndarray) -> np.ndarray:
+    """First 4 key bytes of each row as uint32.
+
+    For uniform keyspaces the cell id is a monotone function of this prefix,
+    so concatenating cells' sorted blobs in cell-id order yields a globally
+    sorted u32 column — exactly the input contract of the
+    ``optimistic_lookup`` Pallas kernel.
+    """
+    return (cols[:, 0] >> np.uint64(32)).astype(np.uint32)

@@ -21,10 +21,14 @@ from typing import Callable, Iterator, Optional
 
 import numpy as np
 
-from .bloom import BloomFilter
-from .index import (FORMATS, POS_MASK, TOMB_FLAG, entry_size, is_tombstone,
-                    real_pos)
+from .bloom import BloomFilter, key_hashes_many
+from .index import (FORMATS, POS_MASK, TOMB_FLAG, _buf_to_cols, entry_size,
+                    is_tombstone, load_blob_arrays, real_pos, u32_prefixes)
 from .util import Metrics
+
+# Below this many disk-resolved queries per batch, the jitted Pallas lookup's
+# dispatch overhead exceeds the host searchsorted it replaces.
+_KERNEL_MIN_QUERIES = 128
 
 
 class CellState(Enum):
@@ -254,6 +258,170 @@ class LargeTable:
         if marker is None or is_tombstone(marker):
             return False
         return real_pos(marker) >= min_live_pos
+
+    # -------------------------------------------------------- batched reads
+    def get_positions_batch(self, ks_id: int, keys, *, use_bloom: bool = True,
+                            use_kernel: bool = True) -> list:
+        """Batched key → position-marker resolution (§3.2 batched).
+
+        Per cell (in cell-id order): check the in-memory buffer under the row
+        lock, short-circuit the remaining misses through the cell's Bloom
+        filter (vectorized — all key hashes are computed once up front), then
+        resolve disk-resident cells either by a single whole-blob read feeding
+        one ``optimistic_lookup`` kernel call across *all* such cells (their
+        concatenated u32 key prefixes stay globally sorted, §4.2), or — when
+        a cell is large relative to its query count, or keys are
+        variable-width/prefix-distributed — by the existing per-key windowed
+        path.  Returns raw markers aligned with ``keys`` (tombstone bits
+        preserved; ``None`` = absent).
+        """
+        if not keys:
+            return []
+        ks = self.ks(ks_id)
+        out: dict[bytes, Optional[int]] = {}
+        uniq = list(dict.fromkeys(keys))
+        if ks.cfg.distribution != "uniform":
+            self._perkey_resolve(ks, [(ks.cell_for_key(k, create=False), k)
+                                      for k in uniq], out, use_bloom)
+            return [out[k] for k in keys]
+
+        h1 = h2 = None
+        if use_bloom:
+            h1, h2 = key_hashes_many(uniq)
+        hash_of = {k: i for i, k in enumerate(uniq)}
+
+        by_cell: dict = {}
+        for k in uniq:
+            by_cell.setdefault(ks.cell_id_for_key(k), []).append(k)
+
+        blob_cells = []     # (cell, missing_keys, disk_pos, disk_len, count)
+        perkey = []         # (cell, key) fallback work
+        esz = entry_size(ks.cfg.key_len)
+        for cid in sorted(by_cell):
+            cell = ks.cells.get(cid)
+            qs = by_cell[cid]
+            if cell is None:
+                for k in qs:
+                    out[k] = None
+                continue
+            with ks.row_lock(cid):
+                missing = []
+                for k in qs:
+                    cur = cell.mem.get(k)
+                    if cur is not None:
+                        out[k] = cur
+                    else:
+                        missing.append(k)
+                if not missing:
+                    continue
+                if cell.state in (CellState.LOADED, CellState.DIRTY_LOADED,
+                                  CellState.EMPTY) or not cell.has_disk():
+                    for k in missing:
+                        out[k] = None
+                    continue
+                snap = (cell.disk_pos, cell.disk_len, cell.disk_count)
+                bloom = cell.bloom
+            # Bloom pass outside the lock: the kernel's jit dispatch (and a
+            # first-shape compile) must not stall writers sharing this row
+            # lock.  The bits array only ever gains bits, so a concurrent
+            # add cannot produce a false negative for keys already present.
+            if bloom is not None and h1 is not None:
+                qi = np.fromiter((hash_of[k] for k in missing),
+                                 dtype=np.int64, count=len(missing))
+                ok = bloom.might_contain_many(
+                    missing, h1=h1[qi], h2=h2[qi], use_kernel=use_kernel)
+                self.metrics.add(bloom_negative=int((~ok).sum()))
+                for k, hit in zip(missing, ok):
+                    if not hit:
+                        out[k] = None
+                missing = [k for k, hit in zip(missing, ok) if hit]
+                if not missing:
+                    continue
+            # Cost model: one whole-blob read beats len(missing) windowed
+            # lookups iff the blob is smaller.
+            per_key_bytes = min(ks.cfg.window_entries * esz, snap[2] * esz)
+            if ks.cfg.index_format in ("optimistic", "header") and \
+                    len(missing) * per_key_bytes >= snap[2] * esz:
+                blob_cells.append((cell, missing) + snap)
+            else:
+                perkey.extend((cell, k) for k in missing)
+
+        if blob_cells:
+            self._blob_resolve(ks, blob_cells, out, use_kernel, perkey)
+        if perkey:
+            self._perkey_resolve(ks, perkey, out, use_bloom=False)
+        return [out[k] for k in keys]
+
+    def _blob_resolve(self, ks: Keyspace, blob_cells, out, use_kernel,
+                      perkey) -> None:
+        """Whole-blob batched resolution across cells: one pread per cell,
+        one parse + one kernel (or searchsorted) call over the concatenation."""
+        esz = entry_size(ks.cfg.key_len)
+        fmt = ks.cfg.index_format
+        bufs, groups = [], []
+        for cell, missing, dpos, dlen, dcount in blob_cells:
+            pread = (lambda base, lim: lambda off, n:
+                     self._index_pread(base + off, min(n, lim - off)))(dpos, dlen)
+            buf, n = load_blob_arrays(pread, dcount, ks.cfg.key_len, fmt)
+            if n < dcount:              # short read (GC race): per-key retry
+                perkey.extend((cell, k) for k in missing)
+                continue
+            bufs.append(buf[:n * esz])
+            groups.append((missing, n))
+            self.metrics.add(batched_blob_reads=1)
+        if not bufs:
+            return
+        buf_cat = b"".join(bufs)
+        total = sum(n for _, n in groups)
+        cols, pos = _buf_to_cols(buf_cat, total, ks.cfg.key_len)
+        u32 = u32_prefixes(cols)
+        queries = [k for missing, _ in groups for k in missing]
+        q32 = np.frombuffer(
+            b"".join(k[:4].ljust(4, b"\x00") for k in queries),
+            dtype=">u4").astype(np.uint32)
+        if use_kernel and len(queries) >= _KERNEL_MIN_QUERIES:
+            from repro.kernels.optimistic_lookup.ops import lookup_indices_batch
+            idx, found = lookup_indices_batch(q32, u32,
+                                              window=ks.cfg.window_entries)
+            self.metrics.add(batched_kernel_lookups=len(queries))
+        else:
+            idx = np.searchsorted(u32, q32, side="left").astype(np.int64)
+            safe = np.minimum(idx, total - 1)
+            found = (idx < total) & (u32[safe] == q32)
+        self.metrics.add(index_lookups=len(queries))
+        key_len = ks.cfg.key_len
+        for k, q, i, hit in zip(queries, q32, idx, found):
+            marker = None
+            if hit:
+                j = int(i)
+                # The kernel may land mid-run when several keys share a u32
+                # prefix (its window rank counts strictly-smaller entries
+                # from the window start, not the array start): rewind to the
+                # run's first entry, then walk forward comparing full keys.
+                while j > 0 and u32[j - 1] == q:
+                    j -= 1
+                while j < total and u32[j] == q:
+                    if buf_cat[j * esz:j * esz + key_len] == k:
+                        marker = int(pos[j])
+                        break
+                    j += 1
+            out[k] = marker
+
+    def _perkey_resolve(self, ks: Keyspace, work, out, use_bloom) -> None:
+        """Existing per-key path: row lock + (bloom +) point lookup."""
+        for cell, key in work:
+            if cell is None:
+                out[key] = None
+                continue
+            with ks.row_lock(cell.cell_id):
+                if use_bloom and cell.bloom is not None and \
+                        cell.mem.get(key) is None and \
+                        not cell.bloom.might_contain(key):
+                    self.metrics.add(bloom_negative=1)
+                    out[key] = None
+                    continue
+                marker, _ = self._position_locked(ks, cell, key)
+            out[key] = marker
 
     # -------------------------------------------------------- load / evict
     def load_cell(self, ks_id: int, cell: Cell) -> None:

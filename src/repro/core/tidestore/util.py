@@ -62,6 +62,10 @@ class Metrics:
     index_flushes: int = 0
     index_lookups: int = 0
     index_lookup_iterations: int = 0
+    batched_blob_reads: int = 0        # whole-cell index reads (multi_get)
+    batched_kernel_lookups: int = 0    # queries resolved via Pallas kernel
+    batched_read_keys: int = 0         # keys entering multi_get/multi_exists
+    batched_read_runs: int = 0         # coalesced WAL pread runs issued
     bloom_negative: int = 0
     cache_hits: int = 0
     cache_misses: int = 0

@@ -96,6 +96,11 @@ class Wal:
         self._alloc_lock = threading.Lock()
         self._fd_lock = threading.Lock()
         self._fds: dict[int, int] = {}
+        # _dirty_segments is touched from appenders (under _alloc_lock) and
+        # the syncer/flush paths (previously under _fd_lock): a single
+        # dedicated lock guards every access so a concurrent append can
+        # never lose a dirty mark to a racing clear.
+        self._dirty_lock = threading.Lock()
         self._dirty_segments: set[int] = set()
         self._synced_upto = 0       # all segments below this idx fsynced+final
         self.tracker = PositionTracker()
@@ -181,7 +186,8 @@ class Wal:
             os.pwrite(fd, header, pos % self.cfg.segment_size)
             if epoch or rtype in (T_ENTRY, T_TOMBSTONE, T_BATCH):
                 self._note_epoch(seg, epoch)
-            self._dirty_segments.add(seg)
+            with self._dirty_lock:
+                self._dirty_segments.add(seg)
         # The large payload copy happens outside the allocation lock.
         os.pwrite(fd, payload, pos % self.cfg.segment_size + HEADER_SIZE)
         self.metrics.add(bytes_written_disk=rec_len, wal_appends=1,
@@ -258,6 +264,56 @@ class Wal:
         if verify and crc32(payload) != crc:
             raise KeyError(f"WAL record at {pos} failed CRC")
         return rtype, payload
+
+    def read_records_batch(self, positions, *, max_run_bytes: int = 1 << 20,
+                           max_gap: int = 32 * 1024) -> dict:
+        """Coalesced positional reads for a batch of record positions.
+
+        Positions are sorted and grouped into runs (same segment, bounded
+        gap between neighbours, bounded total span); each run is served by a
+        single pread covering every member's header, with at most one extra
+        pread for the run's final record payload.  Returns
+        ``{pos: (rtype, payload)}``; positions whose header/CRC checks fail
+        (e.g. relocated underneath the caller) are simply absent — callers
+        retry those through the scalar path.
+        """
+        out: dict[int, tuple[int, bytes]] = {}
+        uniq = sorted(set(positions))
+        if not uniq:
+            return out
+        seg_size = self.cfg.segment_size
+        runs: list[list[int]] = [[uniq[0]]]
+        for p in uniq[1:]:
+            cur = runs[-1]
+            if (p // seg_size == cur[0] // seg_size
+                    and p - cur[-1] <= max_gap
+                    and p + HEADER_SIZE - cur[0] <= max_run_bytes):
+                cur.append(p)
+            else:
+                runs.append([p])
+        for run in runs:
+            start = run[0]
+            buf = self._pread_raw(start, run[-1] + HEADER_SIZE - start)
+            self.metrics.add(batched_read_runs=1)
+            for p in run:
+                off = p - start
+                if off + HEADER_SIZE > len(buf):
+                    continue                      # short read: caller retries
+                rtype, length, crc = _HDR.unpack_from(buf, off)
+                if p % seg_size + HEADER_SIZE + length > seg_size:
+                    continue                      # impossible span: stale pos
+                payload = bytes(buf[off + HEADER_SIZE:
+                                    off + HEADER_SIZE + length])
+                if len(payload) < length:
+                    # Only the run's tail record can extend past the buffer.
+                    payload += self._pread_raw(p + HEADER_SIZE + len(payload),
+                                               length - len(payload))
+                    if len(payload) < length:
+                        continue
+                if crc32(payload) != crc:
+                    continue
+                out[p] = (rtype, payload)
+        return out
 
     def iter_records(self, from_pos: int = 0,
                      stop_pos: Optional[int] = None) -> Iterator[tuple[int, int, bytes]]:
@@ -361,26 +417,34 @@ class Wal:
         """fsync segments that are finalized (fully below the processed
         watermark) — the paper's asynchronous durability tier."""
         final_seg = self.tracker.last_processed // self.cfg.segment_size
-        with self._fd_lock:
+        with self._dirty_lock:
             todo = sorted(s for s in self._dirty_segments if s < final_seg)
+            self._dirty_segments.difference_update(todo)
         for s in todo:
             try:
                 os.fsync(self._fd(s))
             except (OSError, FileNotFoundError):
                 pass
-            self._dirty_segments.discard(s)
 
     def flush(self) -> None:
         """Synchronous durability: fsync every dirty segment (explicit flush
         for applications needing kernel-crash durability, §3.1)."""
-        with self._fd_lock:
+        # Clear marks *before* fsyncing: a concurrent append that re-dirties
+        # a segment mid-flush re-adds its mark (an extra fsync later) rather
+        # than having it lost to the post-fsync discard.
+        with self._dirty_lock:
             todo = sorted(self._dirty_segments)
+            self._dirty_segments.clear()
         for s in todo:
             try:
                 os.fsync(self._fd(s))
-                self._dirty_segments.discard(s)
-            except (OSError, FileNotFoundError):
-                pass
+            except FileNotFoundError:
+                pass                      # segment pruned underneath us
+            except OSError:
+                # fsync failed: restore the mark so the next flush retries
+                # instead of silently reporting durability.
+                with self._dirty_lock:
+                    self._dirty_segments.add(s)
 
     # ----------------------------------------------------------- epochs/gc
     def segment_epochs(self) -> dict[int, tuple[int, int]]:

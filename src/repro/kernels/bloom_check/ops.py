@@ -1,17 +1,51 @@
-"""jit'd wrapper for bloom_check."""
+"""jit'd wrappers for bloom_check.
+
+``might_contain`` is the raw device-array interface.  ``might_contain_batch``
+is the host-facing entry the storage engine's batched read pipeline uses:
+numpy in, numpy out, with query-count and bitset-word padding to power-of-two
+buckets so the jit cache stays small across cells of different sizes.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from .kernel import bloom_check
 from .ref import bloom_check_ref
+from ..padding import next_pow2
 
 
-@functools.partial(jax.jit, static_argnames=("k", "impl", "interpret"))
-def might_contain(h1, h2, bits, *, k: int = 7, impl: str = "pallas",
-                  interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("k", "nbits", "impl", "interpret"))
+def might_contain(h1, h2, bits, *, k: int = 7, nbits: int | None = None,
+                  impl: str = "pallas", interpret: bool = True):
     if impl == "pallas":
-        return bloom_check(h1, h2, bits, k=k, interpret=interpret)
-    return bloom_check_ref(h1, h2, bits, k=k)
+        return bloom_check(h1, h2, bits, k=k, nbits=nbits, interpret=interpret)
+    return bloom_check_ref(h1, h2, bits, k=k, nbits=nbits)
+
+
+def might_contain_batch(h1: np.ndarray, h2: np.ndarray, bits: np.ndarray,
+                        *, k: int = 7, nbits: int | None = None,
+                        impl: str = "pallas") -> np.ndarray:
+    """Batched membership test: h1/h2 (Q,) u32, bits (nwords,) u32 → (Q,) bool.
+
+    ``nbits`` is the filter's true modulus (it need not equal nwords·32 once
+    the word array is padded).  Padding queries probe slot 0 and are sliced
+    off; padded bitset words are never indexed because nbits stays fixed.
+    """
+    q = len(h1)
+    if q == 0:
+        return np.zeros(0, dtype=bool)
+    nbits = nbits if nbits is not None else bits.shape[0] * 32
+    qp = next_pow2(q)
+    if qp != q:
+        h1 = np.concatenate([h1, np.zeros(qp - q, np.uint32)])
+        h2 = np.concatenate([h2, np.ones(qp - q, np.uint32)])
+    wp = next_pow2(bits.shape[0])
+    if wp != bits.shape[0]:
+        bits = np.concatenate([bits, np.zeros(wp - bits.shape[0], np.uint32)])
+    out = might_contain(jnp.asarray(h1), jnp.asarray(h2), jnp.asarray(bits),
+                        k=k, nbits=nbits, impl=impl)
+    return np.asarray(out)[:q]

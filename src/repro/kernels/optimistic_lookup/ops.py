@@ -1,14 +1,42 @@
-"""jit'd wrapper: resolve WAL positions for hash keys via the optimistic
-index, falling back to the oracle for unresolved (budget-exhausted) queries."""
+"""jit'd wrappers: resolve WAL positions for hash keys via the optimistic
+index, falling back to the oracle for unresolved (budget-exhausted) queries.
+
+``lookup_indices`` / ``lookup_positions`` are the raw device interfaces.
+``lookup_indices_batch`` is the host-facing entry used by the storage
+engine's batched read pipeline (``TideDB.multi_get``): numpy in, numpy out,
+padding both axes to power-of-two buckets so repeated calls over cells of
+slightly different sizes reuse the same compiled kernel.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .kernel import optimistic_lookup
 from .ref import optimistic_lookup_ref
+from ..padding import next_pow2
+
+_PAD_KEY = np.uint32(0xFFFFFFFF)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "max_iters", "interpret"))
+def lookup_indices(queries, keys, *, window: int = 512,
+                   max_iters: int = 4, interpret: bool = True):
+    """queries (Q,) u32; keys (N,) u32 sorted.  Returns (idx (Q,) i32,
+    found (Q,) bool): idx is the rank of the first key equal to the query
+    (insertion point when absent), kernel-resolved with oracle fallback."""
+    idx, found, iters = optimistic_lookup(queries, keys, window=window,
+                                          max_iters=max_iters,
+                                          interpret=interpret)
+    unresolved = idx < 0
+    ref_idx, ref_found = optimistic_lookup_ref(queries, keys)
+    idx = jnp.where(unresolved, ref_idx, idx)
+    found = jnp.where(unresolved, ref_found, found)
+    return idx, found
 
 
 @functools.partial(jax.jit,
@@ -17,12 +45,48 @@ def lookup_positions(queries, keys, positions, *, window: int = 512,
                      max_iters: int = 4, interpret: bool = True):
     """queries (Q,) u32; keys (N,) u32 sorted; positions (N,) — the WAL
     offsets.  Returns (pos (Q,), found (Q,) bool)."""
-    idx, found, iters = optimistic_lookup(queries, keys, window=window,
-                                          max_iters=max_iters,
-                                          interpret=interpret)
-    unresolved = idx < 0
-    ref_idx, ref_found = optimistic_lookup_ref(queries, keys)
-    idx = jnp.where(unresolved, ref_idx, idx)
-    found = jnp.where(unresolved, ref_found, found)
+    idx, found = lookup_indices(queries, keys, window=window,
+                                max_iters=max_iters, interpret=interpret)
     safe = jnp.clip(idx, 0, keys.shape[0] - 1)
     return jnp.where(found, positions[safe], 0), found
+
+
+# Fixed per-call query width: every kernel invocation sees Q=_Q_CHUNK, so
+# the jit cache holds one entry per key-count bucket instead of one per
+# (batch size × key count) combination.
+_Q_CHUNK = 256
+
+
+def lookup_indices_batch(queries: np.ndarray, keys: np.ndarray, *,
+                         window: int = 512,
+                         max_iters: int = 4) -> tuple[np.ndarray, np.ndarray]:
+    """Batched index resolution: queries (Q,) u32, keys (N,) u32 sorted →
+    (idx (Q,) i32, found (Q,) bool) as numpy.
+
+    Queries run through the kernel in fixed-width chunks of ``_Q_CHUNK``
+    (zero-padded); keys are padded to the next power of two with 0xFFFFFFFF
+    sentinels (preserving sort order).  Hits landing in the key padding are
+    masked out, so callers never observe a sentinel match.
+    """
+    q, n = len(queries), len(keys)
+    if q == 0 or n == 0:
+        return (np.zeros(q, np.int32), np.zeros(q, dtype=bool))
+    # Floor the key bucket at 4096 so workloads whose touched-cell total
+    # hovers around a power-of-two boundary don't recompile every few calls.
+    np_ = max(4096, next_pow2(n))
+    if np_ != n:
+        keys = np.concatenate([keys, np.full(np_ - n, _PAD_KEY, np.uint32)])
+    keys_j = jnp.asarray(keys)
+    idx_parts, found_parts = [], []
+    for off in range(0, q, _Q_CHUNK):
+        chunk = queries[off:off + _Q_CHUNK]
+        if len(chunk) < _Q_CHUNK:
+            chunk = np.concatenate(
+                [chunk, np.zeros(_Q_CHUNK - len(chunk), np.uint32)])
+        idx, found = lookup_indices(jnp.asarray(chunk), keys_j,
+                                    window=window, max_iters=max_iters)
+        idx_parts.append(np.asarray(idx))
+        found_parts.append(np.asarray(found))
+    idx = np.concatenate(idx_parts)[:q]
+    found = np.concatenate(found_parts)[:q] & (idx < n)
+    return idx.astype(np.int32), found

@@ -10,6 +10,20 @@ from __future__ import annotations
 import jax
 
 
+def make_abstract_mesh(shape, axis_names):
+    """Device-free AbstractMesh across JAX versions.
+
+    JAX 0.4.x takes a single ``((name, size), ...)`` shape tuple; newer
+    releases take ``(axis_sizes, axis_names)``.  Centralized here so the
+    next JAX bump is a one-line fix instead of a test-suite sweep.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(axis_names, shape)))
+    except TypeError:
+        return AbstractMesh(tuple(shape), tuple(axis_names))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

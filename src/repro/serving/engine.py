@@ -8,11 +8,18 @@ and recycles them — the device never copies a KV byte (C1/C5).
 Requests are queued, admitted into free batch slots, decoded step-by-step
 with greedy/temperature sampling, and retired on EOS or length budget;
 retirement is an epoch event: all the sequence's blocks expire at once.
+
+``KvBatchServer`` is the storage-side twin: continuous batching for KV
+*reads*.  Queued get/exists requests are drained once per step into a
+single ``TideDB.multi_get`` / ``multi_exists`` call, so the serve path
+issues batched reads through the Pallas-kernel pipeline instead of N
+scalar round trips (§3.2's 1.7×/15.6× wins at serving scale).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import Callable, Optional
 
@@ -36,6 +43,99 @@ class Request:
     done: bool = False
     t_submit: float = dataclasses.field(default_factory=time.time)
     t_done: Optional[float] = None
+
+
+@dataclasses.dataclass
+class KvRead:
+    """A pending batched read; ``value``/``found`` are set once served."""
+    key: bytes
+    keyspace: int = 0
+    op: str = "get"                     # "get" | "exists"
+    value: Optional[bytes] = None
+    found: Optional[bool] = None
+    done: bool = False
+    t_submit: float = dataclasses.field(default_factory=time.time)
+    t_done: Optional[float] = None
+
+    def result(self):
+        return self.found if self.op == "exists" else self.value
+
+
+class KvBatchServer:
+    """Continuous batching for KV reads over a ``TideDB``.
+
+    Clients ``submit_get``/``submit_exists``; each ``step`` drains up to
+    ``max_batch`` queued requests per op kind and serves them with ONE
+    ``multi_get``/``multi_exists`` call — the storage analogue of the decode
+    engine's slot batching.  Single-threaded step loop by design; submission
+    is thread-safe.
+    """
+
+    def __init__(self, db, *, max_batch: int = 256):
+        self.db = db
+        self.max_batch = max_batch
+        self._lock = threading.Lock()
+        self.queue: collections.deque[KvRead] = collections.deque()
+        self.batches_served = 0
+        self.keys_served = 0
+
+    def submit_get(self, key: bytes, keyspace=0) -> KvRead:
+        req = KvRead(key=key, keyspace=keyspace, op="get")
+        with self._lock:
+            self.queue.append(req)
+        return req
+
+    def submit_exists(self, key: bytes, keyspace=0) -> KvRead:
+        req = KvRead(key=key, keyspace=keyspace, op="exists")
+        with self._lock:
+            self.queue.append(req)
+        return req
+
+    def step(self) -> int:
+        """Serve one formed batch per op kind; returns requests completed."""
+        with self._lock:
+            take = [self.queue.popleft()
+                    for _ in range(min(self.max_batch, len(self.queue)))]
+        if not take:
+            return 0
+        served = 0
+        # One multi-call per (op, keyspace) group present in the batch.
+        groups: dict[tuple, list[KvRead]] = {}
+        for r in take:
+            groups.setdefault((r.op, r.keyspace), []).append(r)
+        for (op, ks), reqs in groups.items():
+            keys = [r.key for r in reqs]
+            if op == "get":
+                values = self.db.multi_get(keys, keyspace=ks)
+                for r, v in zip(reqs, values):
+                    r.value, r.found = v, v is not None
+            else:
+                flags = self.db.multi_exists(keys, keyspace=ks)
+                for r, f in zip(reqs, flags):
+                    r.found = f
+            now = time.time()
+            for r in reqs:
+                r.done, r.t_done = True, now
+            served += len(reqs)
+            self.batches_served += 1
+            self.keys_served += len(reqs)
+        return served
+
+    def run_until_drained(self, max_steps: int = 100_000) -> int:
+        total = 0
+        for _ in range(max_steps):
+            n = self.step()
+            total += n
+            if n == 0:
+                break
+        return total
+
+    def stats(self) -> dict:
+        return {"batches_served": self.batches_served,
+                "keys_served": self.keys_served,
+                "mean_batch": (self.keys_served / self.batches_served
+                               if self.batches_served else 0.0),
+                "queued": len(self.queue)}
 
 
 class ServingEngine:

@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+from hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.kernels.bloom_check.kernel import bloom_check
 from repro.kernels.bloom_check.ref import bloom_add_ref, bloom_check_ref

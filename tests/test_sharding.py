@@ -2,16 +2,17 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import ARCH_IDS, SHAPES, get_config, input_specs
 from repro.distributed import sharding
+from repro.launch.mesh import make_abstract_mesh
 from repro.models import serve as serve_mod
 from repro.training.optimizer import AdamWConfig
 from repro.training.step import abstract_train_state
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = make_abstract_mesh((16, 16), ("data", "model"))
+MESH_MP = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _axis_size(mesh, entry):

@@ -5,8 +5,8 @@ import tempfile
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+from hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core.tidestore import DbConfig, KeyspaceConfig, TideDB
 from repro.core.tidestore.index import (HeaderLookup, OptimisticLookup,

@@ -37,11 +37,21 @@ def batch_fn(step):
     return {k: jnp.asarray(v) for k, v in b.items()}
 
 
+def pinned_batch_fn(step):
+    """Two repeating batches from a pinned seed: a learnable (memorizable)
+    stream, unlike fresh random tokens whose loss floor is ln(vocab)."""
+    b = synthetic_batch(step % 2, batch=2, seq=16, vocab=CFG.vocab)
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
 class TestCheckpointRestart:
     def test_loss_decreases_and_checkpoints(self, tmpdir):
-        out = run(CFG, OPT, LoopConfig(total_steps=12, checkpoint_every=5),
-                  batch_fn, tmpdir, log_fn=lambda s: None)
-        assert out["final_loss"] < out["losses"][0]
+        out = run(CFG, OPT, LoopConfig(total_steps=12, checkpoint_every=5,
+                                       seed=0),
+                  pinned_batch_fn, tmpdir, log_fn=lambda s: None)
+        # Smoothed tail-vs-head comparison: single-step losses are noisy.
+        losses = out["losses"]
+        assert np.mean(losses[-4:]) < np.mean(losses[:4])
         ckpt = CheckpointManager(tmpdir)
         assert ckpt.latest_step() == 11
         ckpt.close()
