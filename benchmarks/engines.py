@@ -16,19 +16,30 @@ import time
 import numpy as np
 
 from repro.core.lsm_baseline import LsmBaseline, LsmConfig
-from repro.core.tidestore import DbConfig, KeyspaceConfig, TideDB
+from repro.core.tidestore import (DbConfig, KeyspaceConfig, ShardedTideDB,
+                                  TideDB)
 from repro.core.tidestore.wal import WalConfig
 
 
-def make_tide(path, relocation=False):
-    return TideDB(path, DbConfig(
+def _tide_cfg(relocation=False):
+    return DbConfig(
         keyspaces=[KeyspaceConfig("default", n_cells=256,
                                   dirty_flush_threshold=2048)],
         wal=WalConfig(segment_size=8 * 1024 * 1024),
         index_wal=WalConfig(segment_size=32 * 1024 * 1024),
         relocation=relocation,
         cache_bytes=8 * 1024 * 1024,
-    ))
+    )
+
+
+def make_tide(path, relocation=False):
+    return TideDB(path, _tide_cfg(relocation))
+
+
+def make_tide_sharded(path, n_shards=4):
+    """Static key-space sharding: N independent TideDB shards behind the
+    Engine protocol, batched reads fanned across a thread pool."""
+    return ShardedTideDB(path, _tide_cfg(), n_shards=n_shards)
 
 
 def make_rocks(path):

@@ -13,8 +13,8 @@ from __future__ import annotations
 
 import time
 
-from .engines import (ENGINES, Bench, gen_keys, multi_exists, multi_get,
-                      zipf_indices)
+from .engines import (ENGINES, Bench, gen_keys, make_tide, make_tide_sharded,
+                      multi_exists, multi_get, zipf_indices)
 
 
 def run(n_keys: int = 6000, n_ops: int = 4000, csv=print) -> None:
@@ -65,6 +65,9 @@ def run(n_keys: int = 6000, n_ops: int = 4000, csv=print) -> None:
 
 
 def _clear_cache(db) -> None:
+    if hasattr(db, "clear_caches"):          # sharded engine
+        db.clear_caches()
+        return
     cache = getattr(db, "cache", None)
     if cache is not None and hasattr(cache, "clear"):
         cache.clear()
@@ -136,5 +139,53 @@ def run_batched(n_keys: int = 6000, n_ops: int = 2048, value_size: int = 128,
                 f"{n_ops/g_s:.0f} ops/s ({sp_get:.1f}x scalar)")
             csv(f"{tag}.multi_exists.b{bs},{e_s/len(exists_probe)*1e6:.2f},"
                 f"{len(exists_probe)/e_s:.0f} ops/s ({sp_ex:.1f}x scalar)")
+        b.close()
+    return speedups
+
+
+def run_sharded(n_keys: int = 24000, n_ops: int = 8192, value_size: int = 128,
+                n_shards: int = 4, csv=print,
+                batch_sizes=(256, 1024, 2048, 4096), repeats: int = 3) -> dict:
+    """Shard-parallel ``multi_get``: ShardedTideDB(n_shards) vs one TideDB.
+
+    Same key set, same batched probe sequence through both engines; reports
+    ops/s per batch size (best of ``repeats`` passes — the minimum strips
+    scheduler noise, which matters on small shared boxes) and the
+    sharded/single speedup ratio.  The acceptance bar for the sharded front
+    end is ≥1.5× at batch ≥1024; the fan-out needs real cores to win, so
+    expect the ratio to degrade toward ~1× on 1–2-core machines.
+    Returns ``{batch: speedup}``.
+    """
+    engines = {
+        "single": Bench("tide-1", make_tide),
+        "sharded": Bench(f"tide-x{n_shards}",
+                         lambda p: make_tide_sharded(p, n_shards=n_shards)),
+    }
+    keys = gen_keys(n_keys, seed=23)
+    idx = zipf_indices(n_keys, n_ops, 0.0, seed=29)
+    times: dict = {name: {} for name in engines}
+    for name, b in engines.items():
+        b.fill(keys, value_size)
+        for bs in batch_sizes:               # jit warm-up at every shape
+            multi_get(b.db, [keys[i] for i in idx[:bs]])
+        for bs in batch_sizes:
+            best = float("inf")
+            for _ in range(repeats):
+                _clear_cache(b.db)
+                t0 = time.perf_counter()
+                for off in range(0, n_ops, bs):
+                    multi_get(b.db, [keys[i] for i in idx[off:off + bs]])
+                best = min(best, time.perf_counter() - t0)
+            times[name][bs] = best
+    speedups = {}
+    for bs in batch_sizes:
+        single_s, shard_s = times["single"][bs], times["sharded"][bs]
+        speedups[bs] = single_s / shard_s
+        csv(f"kvshard.v{value_size}.x1.multi_get.b{bs},"
+            f"{single_s/n_ops*1e6:.2f},{n_ops/single_s:.0f} ops/s")
+        csv(f"kvshard.v{value_size}.x{n_shards}.multi_get.b{bs},"
+            f"{shard_s/n_ops*1e6:.2f},{n_ops/shard_s:.0f} ops/s "
+            f"({speedups[bs]:.2f}x single)")
+    for b in engines.values():
         b.close()
     return speedups

@@ -14,8 +14,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: kv,kvbatch,reloc,index,"
-                         "recovery,validator,kernels,roofline")
+                    help="comma-separated subset: kv,kvbatch,kvshard,reloc,"
+                         "index,recovery,validator,kernels,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -25,6 +25,7 @@ def main() -> None:
     suites = [
         ("kv", kv_throughput.run),          # Figures 1, 6, 7, 8
         ("kvbatch", kv_throughput.run_batched),  # batched read pipeline
+        ("kvshard", kv_throughput.run_sharded),  # shard-parallel multi_get
         ("reloc", relocation.run),          # Figure 9
         ("index", index_formats.run),       # Figure 10 / §6.3
         ("recovery", recovery.run),         # §3.3–3.4

@@ -1,10 +1,18 @@
 #!/usr/bin/env bash
-# Tier-1 gate: install dev deps and run the full suite.  A red suite (or a
-# collection error) exits non-zero, so it can't land again.
+# Tier-1 gate: install dev deps, lint, and run the full suite.  A red suite
+# (or a collection error) exits non-zero, so it can't land again.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m pip install -q -r requirements-dev.txt || \
     echo "warn: dev deps not installed (offline?); property tests will skip"
+
+# Lint gate (config in pyproject.toml).  Skipped gracefully when ruff is
+# unavailable (offline images); the GitHub workflow always installs it.
+if python -m ruff --version >/dev/null 2>&1; then
+    python -m ruff check .
+else
+    echo "warn: ruff not installed; skipping lint"
+fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

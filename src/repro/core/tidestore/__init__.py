@@ -1,15 +1,20 @@
 """Tidehunter storage engine — faithful host implementation (paper §3–§5)."""
+from .api import (Engine, KeyspaceHandle, ReadOptions, WriteBatch,
+                  WriteOptions)
+from .cache import BlobArrayCache, LruCache
 from .db import DbConfig, TideDB
 from .index import (HeaderLookup, OptimisticLookup, serialize_header,
                     serialize_optimistic)
 from .large_table import CellState, KeyspaceConfig, LargeTable
 from .relocate import Decision, Relocator
+from .shard import ShardedTideDB
 from .util import Metrics, PositionTracker
 from .wal import Wal, WalConfig
 
 __all__ = [
-    "TideDB", "DbConfig", "KeyspaceConfig", "CellState", "LargeTable",
-    "Wal", "WalConfig", "Relocator", "Decision", "Metrics",
-    "PositionTracker", "OptimisticLookup", "HeaderLookup",
-    "serialize_optimistic", "serialize_header",
+    "TideDB", "ShardedTideDB", "DbConfig", "KeyspaceConfig", "CellState",
+    "LargeTable", "Engine", "KeyspaceHandle", "WriteBatch", "ReadOptions",
+    "WriteOptions", "Wal", "WalConfig", "Relocator", "Decision", "Metrics",
+    "PositionTracker", "LruCache", "BlobArrayCache", "OptimisticLookup",
+    "HeaderLookup", "serialize_optimistic", "serialize_header",
 ]

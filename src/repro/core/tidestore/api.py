@@ -1,0 +1,237 @@
+"""Public engine surface: the ``Engine`` protocol, keyspace handles, typed
+write batches, and per-call option dataclasses.
+
+Every front end (embedded ``TideDB``, the sharded ``ShardedTideDB``, the
+serving-path ``KvBatchServer``) speaks this one contract, so scale-out
+composes behind it (ROADMAP north star; cf. Neon's phase-1 static sharding
+RFC: pick the engine protocol first, then shard behind it).
+
+- ``KeyspaceHandle`` replaces positional ``keyspace=`` threading: bind the
+  keyspace once (``db.keyspace("objects")``) and call ``get``/``put``/...
+  without repeating it.
+- ``WriteBatch`` replaces raw ``("put", ks, key, value)`` tuples with a
+  typed builder applied atomically via one ``Wal.append_batch`` record.
+- ``ReadOptions``/``WriteOptions`` stop per-call behaviour accreting as
+  kwargs: cache-fill policy, kernel routing, snapshot-consistent min-live
+  pinning, durability class, and epoch all live in two small dataclasses.
+
+Legacy call signatures keep working: tuple batches go through a shim that
+emits ``DeprecationWarning`` (removed after one release); the
+``keyspace=``/``epoch=`` kwargs remain supported protocol-level spellings
+(``epoch=`` silently folds into ``WriteOptions``).
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass
+from typing import Iterable, Optional, Protocol, runtime_checkable
+
+
+def deprecated_call(message: str) -> None:
+    """One-liner shim marker: warns without breaking legacy callers.
+
+    stacklevel walks out of this helper, ``coerce_batch``, and the engine's
+    ``write_batch`` so the warning points at the legacy call site."""
+    warnings.warn(message, DeprecationWarning, stacklevel=4)
+
+
+# ------------------------------------------------------------------ options
+@dataclass(frozen=True)
+class ReadOptions:
+    """Per-call read behaviour.
+
+    - ``fill_cache``: populate the value LRU with what this read fetched
+      (turn off for scans that would churn the working set).
+    - ``use_kernel``: route batched resolution through the Pallas kernel
+      wrappers; ``None`` defers to the engine's configured default.
+    - ``min_live_pin``: snapshot-consistency floor.  A batch issued with a
+      pinned position treats everything below ``max(pin, first_live_pos)``
+      as pruned, so concurrent epoch pruning cannot change visibility
+      mid-batch.  Capture the pin with ``Engine.min_live()``.  Pinned
+      reads bypass the value cache (cached values carry no position to
+      check against the pin).
+    """
+    fill_cache: bool = True
+    use_kernel: Optional[bool] = None
+    min_live_pin: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class WriteOptions:
+    """Per-call write behaviour.
+
+    - ``durability``: ``"async"`` (OS page cache now, fsync via the syncer —
+      the paper's default tier, §3.1) or ``"sync"`` (fsync before return).
+    - ``epoch``: epoch tag for segment-granular pruning (§4.4).
+    """
+    durability: str = "async"
+    epoch: int = 0
+
+    def __post_init__(self):
+        if self.durability not in ("async", "sync"):
+            raise ValueError(f"unknown durability class {self.durability!r}")
+
+
+READ_DEFAULTS = ReadOptions()
+WRITE_DEFAULTS = WriteOptions()
+
+
+# ------------------------------------------------------------------ batches
+class WriteBatch:
+    """Typed atomic batch builder (§3.1 "Atomic batch writes").
+
+    Ops accumulate in submission order and apply atomically — one WAL
+    allocation covers the whole batch, and a torn batch is dropped
+    wholesale on replay.  A batch may be bound to a default keyspace
+    (``handle.batch()``) or span keyspaces by passing ``keyspace=`` per op.
+    """
+
+    __slots__ = ("_ops", "default_keyspace")
+
+    def __init__(self, default_keyspace=None):
+        self._ops: list[tuple] = []
+        self.default_keyspace = default_keyspace
+
+    def put(self, key: bytes, value: bytes, keyspace=None) -> "WriteBatch":
+        self._ops.append(("put", self._ks(keyspace), key, value))
+        return self
+
+    def delete(self, key: bytes, keyspace=None) -> "WriteBatch":
+        self._ops.append(("del", self._ks(keyspace), key))
+        return self
+
+    def _ks(self, keyspace):
+        if keyspace is not None:
+            return keyspace
+        return self.default_keyspace if self.default_keyspace is not None else 0
+
+    @property
+    def ops(self) -> tuple:
+        """The accumulated ops as legacy-shaped tuples (engine-internal)."""
+        return tuple(self._ops)
+
+    def extend(self, ops: Iterable[tuple]) -> "WriteBatch":
+        """Absorb legacy-shaped tuples (shim for old call sites)."""
+        for op in ops:
+            if op[0] == "put":
+                _, ks, key, value = op
+                self.put(key, value, keyspace=ks)
+            elif op[0] == "del":
+                _, ks, key = op
+                self.delete(key, keyspace=ks)
+            else:
+                raise ValueError(f"unknown batch op {op[0]!r}")
+        return self
+
+    def clear(self) -> None:
+        self._ops.clear()
+
+    def __len__(self) -> int:
+        return len(self._ops)
+
+    def __bool__(self) -> bool:
+        return bool(self._ops)
+
+
+def coerce_batch(ops) -> WriteBatch:
+    """Accept a ``WriteBatch`` or legacy tuple iterable (deprecation shim)."""
+    if isinstance(ops, WriteBatch):
+        return ops
+    deprecated_call("tuple-based write_batch ops are deprecated; build a "
+                    "WriteBatch (wb.put(k, v) / wb.delete(k)) instead")
+    return WriteBatch().extend(ops)
+
+
+# ------------------------------------------------------------------ handles
+class KeyspaceHandle:
+    """A keyspace-bound view of an engine.
+
+    ``db.keyspace("objects")`` returns a handle whose methods never take a
+    ``keyspace`` argument — the binding happened once, at handle creation.
+    Handles are cheap, stateless, and safe to share across threads.
+    """
+
+    __slots__ = ("engine", "name")
+
+    def __init__(self, engine: "Engine", name):
+        self.engine = engine
+        self.name = name
+
+    # reads
+    def get(self, key: bytes, opts: Optional[ReadOptions] = None):
+        return self.engine.get(key, keyspace=self.name, opts=opts)
+
+    def exists(self, key: bytes, opts: Optional[ReadOptions] = None) -> bool:
+        return self.engine.exists(key, keyspace=self.name, opts=opts)
+
+    def multi_get(self, keys, opts: Optional[ReadOptions] = None) -> list:
+        return self.engine.multi_get(keys, keyspace=self.name, opts=opts)
+
+    def multi_exists(self, keys, opts: Optional[ReadOptions] = None) -> list:
+        return self.engine.multi_exists(keys, keyspace=self.name, opts=opts)
+
+    def prev(self, key: bytes):
+        return self.engine.prev(key, keyspace=self.name)
+
+    # writes
+    def put(self, key: bytes, value: bytes,
+            opts: Optional[WriteOptions] = None) -> int:
+        return self.engine.put(key, value, keyspace=self.name, opts=opts)
+
+    def delete(self, key: bytes, opts: Optional[WriteOptions] = None) -> int:
+        return self.engine.delete(key, keyspace=self.name, opts=opts)
+
+    def batch(self) -> WriteBatch:
+        """A ``WriteBatch`` whose ops default to this keyspace."""
+        return WriteBatch(default_keyspace=self.name)
+
+    def write_batch(self, batch: WriteBatch,
+                    opts: Optional[WriteOptions] = None):
+        return self.engine.write_batch(batch, opts=opts)
+
+    def __repr__(self) -> str:
+        return f"KeyspaceHandle({self.name!r} @ {type(self.engine).__name__})"
+
+
+# ----------------------------------------------------------------- protocol
+@runtime_checkable
+class Engine(Protocol):
+    """The engine contract every front end implements.
+
+    ``TideDB`` implements it embedded and single-store; ``ShardedTideDB``
+    implements it by statically partitioning keys across N ``TideDB``
+    shards; ``KvBatchServer`` consumes it (any Engine serves the queue).
+    """
+
+    def keyspace(self, name) -> KeyspaceHandle: ...
+
+    def get(self, key: bytes, keyspace=0,
+            opts: Optional[ReadOptions] = None) -> Optional[bytes]: ...
+
+    def exists(self, key: bytes, keyspace=0,
+               opts: Optional[ReadOptions] = None) -> bool: ...
+
+    def multi_get(self, keys, keyspace=0,
+                  opts: Optional[ReadOptions] = None) -> list: ...
+
+    def multi_exists(self, keys, keyspace=0,
+                     opts: Optional[ReadOptions] = None) -> list: ...
+
+    def prev(self, key: bytes, keyspace=0): ...
+
+    def put(self, key: bytes, value: bytes, keyspace=0,
+            opts: Optional[WriteOptions] = None) -> int: ...
+
+    def delete(self, key: bytes, keyspace=0,
+               opts: Optional[WriteOptions] = None) -> int: ...
+
+    def write_batch(self, ops,
+                    opts: Optional[WriteOptions] = None) -> list: ...
+
+    def min_live(self) -> int: ...
+
+    def flush(self) -> None: ...
+
+    def stats(self) -> dict: ...
+
+    def close(self, flush: bool = True) -> None: ...

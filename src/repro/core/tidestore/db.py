@@ -13,9 +13,11 @@ from __future__ import annotations
 
 import os
 import threading
-from dataclasses import dataclass, field
-from typing import Iterable, Optional
+from dataclasses import dataclass, field, replace
+from typing import Optional
 
+from .api import (KeyspaceHandle, ReadOptions, WriteBatch, WriteOptions,
+                  coerce_batch)
 from .cache import LruCache
 from .flush import Flusher
 from .index import TOMB_FLAG, is_tombstone, real_pos
@@ -44,6 +46,7 @@ class DbConfig:
     mem_budget_entries: int = 2_000_000    # Large Table residency budget
     batched_kernels: bool = True           # route multi_get/multi_exists
                                            # through the Pallas kernel wrappers
+    blob_cache_bytes: int = 8 * 1024 * 1024  # parsed index-blob memo budget
 
 
 class TideDB:
@@ -56,7 +59,8 @@ class TideDB:
         self.value_wal = Wal(path, "value", self.cfg.wal, self.metrics)
         self.index_wal = Wal(path, "index", self.cfg.index_wal, self.metrics)
         self.table = LargeTable(self.cfg.keyspaces, self.index_wal.pread,
-                                self.metrics)
+                                self.metrics,
+                                blob_cache_bytes=self.cfg.blob_cache_bytes)
         self.cache = LruCache(self.cfg.cache_bytes)
         self.flusher = Flusher(self.table, self.index_wal, self.value_wal,
                                self.cfg.flusher_threads, self.metrics)
@@ -126,71 +130,133 @@ class TideDB:
             return keyspace
         return self._ks_by_name[keyspace]
 
-    def put(self, key: bytes, value: bytes, keyspace=0, epoch: int = 0) -> int:
+    def keyspace(self, name) -> KeyspaceHandle:
+        """Bind a keyspace once; the handle's methods never re-thread it."""
+        self._ks_id(name)                    # validate eagerly
+        return KeyspaceHandle(self, name)
+
+    @staticmethod
+    def _wopts(opts: Optional[WriteOptions], epoch) -> WriteOptions:
+        # Legacy epoch= kwarg shim: fold into WriteOptions.  Both spellings
+        # at once must agree — silently preferring either would mis-tag the
+        # record for epoch pruning.
+        if opts is None:
+            return WriteOptions(epoch=epoch) if epoch else WriteOptions()
+        if epoch and opts.epoch and epoch != opts.epoch:
+            raise ValueError(
+                f"conflicting epochs: epoch={epoch} kwarg vs "
+                f"WriteOptions(epoch={opts.epoch})")
+        if epoch and not opts.epoch:
+            return replace(opts, epoch=epoch)
+        return opts
+
+    def put(self, key: bytes, value: bytes, keyspace=0, epoch: int = 0,
+            opts: Optional[WriteOptions] = None) -> int:
+        opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
-        payload = encode_entry(ks_id, key, value, epoch)
-        pos = self.value_wal.append(T_ENTRY, payload, epoch,
+        payload = encode_entry(ks_id, key, value, opts.epoch)
+        pos = self.value_wal.append(T_ENTRY, payload, opts.epoch,
                                     app_bytes=len(key) + len(value))
         self.table.apply(ks_id, key, pos)
         self.value_wal.mark_processed(pos, len(payload))
         self.cache.invalidate(self._cache_key(ks_id, key))
+        if opts.durability == "sync":
+            self.value_wal.flush()
         return pos
 
-    def delete(self, key: bytes, keyspace=0, epoch: int = 0) -> int:
+    def delete(self, key: bytes, keyspace=0, epoch: int = 0,
+               opts: Optional[WriteOptions] = None) -> int:
+        opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
-        payload = encode_tombstone(ks_id, key, epoch)
-        pos = self.value_wal.append(T_TOMBSTONE, payload, epoch, app_bytes=len(key))
+        payload = encode_tombstone(ks_id, key, opts.epoch)
+        pos = self.value_wal.append(T_TOMBSTONE, payload, opts.epoch,
+                                    app_bytes=len(key))
         self.table.apply(ks_id, key, TOMB_FLAG | pos)
         self.value_wal.mark_processed(pos, len(payload))
         self.cache.invalidate(self._cache_key(ks_id, key))
+        if opts.durability == "sync":
+            self.value_wal.flush()
         return pos
 
-    def write_batch(self, ops: Iterable[tuple], epoch: int = 0) -> None:
-        """Atomic batch (§3.1): ops are ("put", ks, key, value) or
-        ("del", ks, key).  One WAL allocation covers the whole batch."""
+    def write_batch(self, ops, epoch: int = 0,
+                    opts: Optional[WriteOptions] = None) -> list:
+        """Atomic batch (§3.1): one WAL allocation covers the whole batch.
+
+        ``ops`` is a ``WriteBatch`` (preferred) or a legacy iterable of
+        ("put", ks, key, value) / ("del", ks, key) tuples (deprecation
+        shim).  Returns the sub-record WAL positions aligned with the ops.
+        """
+        batch = coerce_batch(ops)
+        opts = self._wopts(opts, epoch)
         subrecords, metas = [], []
         app_bytes = 0
-        for op in ops:
+        for op in batch.ops:
             if op[0] == "put":
                 _, ks, key, value = op
                 ks_id = self._ks_id(ks)
-                subrecords.append((T_ENTRY, encode_entry(ks_id, key, value, epoch)))
+                subrecords.append((T_ENTRY,
+                                   encode_entry(ks_id, key, value, opts.epoch)))
                 metas.append((ks_id, key, False))
                 app_bytes += len(key) + len(value)
-            elif op[0] == "del":
+            else:
                 _, ks, key = op
                 ks_id = self._ks_id(ks)
-                subrecords.append((T_TOMBSTONE, encode_tombstone(ks_id, key, epoch)))
+                subrecords.append((T_TOMBSTONE,
+                                   encode_tombstone(ks_id, key, opts.epoch)))
                 metas.append((ks_id, key, True))
                 app_bytes += len(key)
-            else:
-                raise ValueError(f"unknown batch op {op[0]!r}")
         if not subrecords:
-            return
+            return []
         batch_pos, sub_positions = self.value_wal.append_batch(
-            subrecords, epoch, app_bytes=app_bytes)
+            subrecords, opts.epoch, app_bytes=app_bytes)
         for (ks_id, key, is_del), pos in zip(metas, sub_positions):
             marker = (TOMB_FLAG | pos) if is_del else pos
             self.table.apply(ks_id, key, marker)
             self.cache.invalidate(self._cache_key(ks_id, key))
         body_len = sum(HEADER_SIZE + len(p) for _, p in subrecords)
         self.value_wal.mark_processed(batch_pos, body_len)
+        if opts.durability == "sync":
+            self.value_wal.flush()
+        return sub_positions
 
     # ---------------------------------------------------------------- reads
     def _cache_key(self, ks_id: int, key: bytes) -> bytes:
         return bytes([ks_id]) + key
 
-    def get(self, key: bytes, keyspace=0) -> Optional[bytes]:
+    def min_live(self) -> int:
+        """Current visibility floor; pass as ``ReadOptions.min_live_pin``
+        for a snapshot-consistent view across a batch of reads."""
+        return self.value_wal.first_live_pos
+
+    def _min_live(self, opts: ReadOptions) -> int:
+        # The pin is a floor: pruning that already ran still wins, but a
+        # prune racing the batch cannot split visibility across it.
+        base = self.value_wal.first_live_pos
+        if opts.min_live_pin is not None:
+            return max(base, opts.min_live_pin)
+        return base
+
+    def _use_kernel(self, opts: ReadOptions) -> bool:
+        return (self.cfg.batched_kernels if opts.use_kernel is None
+                else opts.use_kernel)
+
+    def get(self, key: bytes, keyspace=0,
+            opts: Optional[ReadOptions] = None) -> Optional[bytes]:
+        opts = opts or ReadOptions()
         ks_id = self._ks_id(keyspace)
+        min_live = self._min_live(opts)
         ck = self._cache_key(ks_id, key)
-        v = self.cache.get(ck)
-        if v is not None:
-            self.metrics.add(cache_hits=1)
-            return v
+        if opts.min_live_pin is None:
+            # Pinned reads bypass the cache: a cached value carries no
+            # position, so it can't be checked against the pin.
+            v = self.cache.get(ck)
+            if v is not None:
+                self.metrics.add(cache_hits=1)
+                return v
         self.metrics.add(cache_misses=1)
         for _attempt in range(2):           # retry once across concurrent GC
             pos = self.table.get_position(ks_id, key)
-            if pos is None or pos < self.value_wal.first_live_pos:
+            if pos is None or pos < min_live:
                 return None                  # absent or epoch-pruned
             try:
                 rtype, payload = self.value_wal.read_record(pos)
@@ -199,19 +265,24 @@ class TideDB:
             if rtype == T_TOMBSTONE:
                 return None
             _, _, value, _ = decode_entry(payload)
-            self.cache.put(ck, value)
+            if opts.fill_cache:
+                self.cache.put(ck, value)
             return value
         return None
 
-    def exists(self, key: bytes, keyspace=0) -> bool:
+    def exists(self, key: bytes, keyspace=0,
+               opts: Optional[ReadOptions] = None) -> bool:
+        opts = opts or ReadOptions()
         ks_id = self._ks_id(keyspace)
-        if self.cache.get(self._cache_key(ks_id, key)) is not None:
+        if opts.min_live_pin is None and \
+                self.cache.get(self._cache_key(ks_id, key)) is not None:
             self.metrics.add(cache_hits=1)
             return True
-        return self.table.exists(ks_id, key, self.value_wal.first_live_pos)
+        return self.table.exists(ks_id, key, self._min_live(opts))
 
     # -------------------------------------------------------- batched reads
-    def multi_get(self, keys, keyspace=0) -> list:
+    def multi_get(self, keys, keyspace=0,
+                  opts: Optional[ReadOptions] = None) -> list:
         """Batched point lookups (§3.2, batched): resolve a whole batch of
         keys in one pipeline pass — one cache sweep, grouped per-cell index
         resolution (Bloom pass + one vectorized lookup across resident cell
@@ -222,11 +293,18 @@ class TideDB:
         """
         if not keys:
             return []
+        opts = opts or ReadOptions()
         ks_id = self._ks_id(keyspace)
+        min_live = self._min_live(opts)
         self.metrics.add(batched_read_keys=len(keys))
         results: list = [None] * len(keys)
         cks = [self._cache_key(ks_id, k) for k in keys]
-        cached = self.cache.get_many(cks)
+        if opts.min_live_pin is None:
+            cached = self.cache.get_many(cks)
+        else:
+            # Pinned reads bypass the cache (cached values carry no
+            # position to check against the pin).
+            cached = [None] * len(keys)
         miss_idx = [i for i, v in enumerate(cached) if v is None]
         for i, v in enumerate(cached):
             if v is not None:
@@ -237,13 +315,13 @@ class TideDB:
             return results
         markers = self.table.get_positions_batch(
             ks_id, [keys[i] for i in miss_idx],
-            use_kernel=self.cfg.batched_kernels)
+            use_kernel=self._use_kernel(opts))
         want: dict[int, list[int]] = {}
         for i, marker in zip(miss_idx, markers):
             if marker is None or is_tombstone(marker):
                 continue
             pos = real_pos(marker)
-            if pos < self.value_wal.first_live_pos:
+            if pos < min_live:
                 continue                 # epoch-pruned
             want.setdefault(pos, []).append(i)
         records = self.value_wal.read_records_batch(want) if want else {}
@@ -253,7 +331,7 @@ class TideDB:
             if rec is None:
                 # Relocated underneath us: the scalar path re-resolves.
                 for i in slots:
-                    results[i] = self.get(keys[i], keyspace)
+                    results[i] = self.get(keys[i], keyspace, opts=opts)
                 continue
             rtype, payload = rec
             if rtype == T_TOMBSTONE:
@@ -262,10 +340,12 @@ class TideDB:
             for i in slots:
                 results[i] = value
                 fills.append((cks[i], value))
-        self.cache.put_many(fills)       # single cache fill at the end
+        if opts.fill_cache:
+            self.cache.put_many(fills)   # single cache fill at the end
         return results
 
-    def multi_exists(self, keys, keyspace=0) -> list:
+    def multi_exists(self, keys, keyspace=0,
+                     opts: Optional[ReadOptions] = None) -> list:
         """Batched existence checks resolved entirely from index state —
         the 15.6× op (§3.2), vectorized: one cache sweep, then per-cell
         Bloom passes over precomputed hashes and one batched Large Table
@@ -273,10 +353,15 @@ class TideDB:
         ``[db.exists(k) for k in keys]``."""
         if not keys:
             return []
+        opts = opts or ReadOptions()
         ks_id = self._ks_id(keyspace)
         self.metrics.add(batched_read_keys=len(keys))
         results = [False] * len(keys)
-        cached = self.cache.get_many([self._cache_key(ks_id, k) for k in keys])
+        if opts.min_live_pin is None:
+            cached = self.cache.get_many(
+                [self._cache_key(ks_id, k) for k in keys])
+        else:
+            cached = [None] * len(keys)      # pinned: bypass the cache
         miss_idx = [i for i, v in enumerate(cached) if v is None]
         for i, v in enumerate(cached):
             if v is not None:
@@ -286,8 +371,8 @@ class TideDB:
             return results
         markers = self.table.get_positions_batch(
             ks_id, [keys[i] for i in miss_idx],
-            use_kernel=self.cfg.batched_kernels)
-        min_live = self.value_wal.first_live_pos
+            use_kernel=self._use_kernel(opts))
+        min_live = self._min_live(opts)
         for i, marker in zip(miss_idx, markers):
             results[i] = (marker is not None and not is_tombstone(marker)
                           and real_pos(marker) >= min_live)

@@ -120,6 +120,11 @@ class Flusher:
                 else:
                     cell.state = CellState.UNLOADED
                     cell.min_dirty_pos = None
+            # The old blob is no longer referenced: return its memo budget
+            # now instead of waiting for LRU aging (relocation of the Index
+            # Store reuses positions never, so this can't evict live data).
+            if old_disk[0] is not None:
+                self.table.blob_cache.invalidate(old_disk[0])
             return True
         finally:
             with ks.row_lock(cell.cell_id):

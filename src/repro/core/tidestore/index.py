@@ -324,6 +324,24 @@ def load_blob_arrays(pread: Callable[[int, int], bytes], count: int,
     return buf, min(count, len(buf) // esz)
 
 
+def blob_to_arrays(buf: bytes, n: int,
+                   key_len: int) -> tuple[np.ndarray, np.ndarray, bytes, int]:
+    """Parse a sorted entry buffer into self-contained lookup arrays.
+
+    Returns ``(u32 key prefixes, u64 positions, packed key bytes, nbytes)``
+    — all copies (nothing views ``buf``), sized for the blob-array memo
+    cache.  The key bytes are packed contiguously at ``key_len`` stride so
+    full-key verification after a prefix hit is a direct slice compare.
+    """
+    esz = entry_size(key_len)
+    raw = np.frombuffer(buf, dtype=np.uint8, count=n * esz).reshape(n, esz)
+    cols, pos = _buf_to_cols(buf, n, key_len)
+    u32 = u32_prefixes(cols)
+    keys = np.ascontiguousarray(raw[:, :key_len]).tobytes()
+    nbytes = u32.nbytes + pos.nbytes + len(keys)
+    return u32, pos, keys, nbytes
+
+
 def u32_prefixes(cols: np.ndarray) -> np.ndarray:
     """First 4 key bytes of each row as uint32.
 

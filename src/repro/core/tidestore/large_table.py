@@ -21,9 +21,10 @@ from typing import Callable, Iterator, Optional
 
 import numpy as np
 
-from .bloom import BloomFilter, key_hashes_many
-from .index import (FORMATS, POS_MASK, TOMB_FLAG, _buf_to_cols, entry_size,
-                    is_tombstone, load_blob_arrays, real_pos, u32_prefixes)
+from .bloom import BloomFilter
+from .cache import BlobArrayCache
+from .index import (FORMATS, blob_to_arrays, entry_size, is_tombstone,
+                    load_blob_arrays, real_pos)
 from .util import Metrics
 
 # Below this many disk-resolved queries per batch, the jitted Pallas lookup's
@@ -139,12 +140,14 @@ class LargeTable:
     """All keyspaces + the read/update protocol against the Index Store."""
 
     def __init__(self, keyspaces: list[KeyspaceConfig], index_pread,
-                 metrics: Optional[Metrics] = None):
+                 metrics: Optional[Metrics] = None,
+                 blob_cache_bytes: int = 8 * 1024 * 1024):
         self.metrics = metrics or Metrics()
         self.keyspaces = [Keyspace(i, cfg, self.metrics)
                           for i, cfg in enumerate(keyspaces)]
         self.by_name = {cfg.name: i for i, cfg in enumerate(keyspaces)}
         self._index_pread = index_pread        # (pos, n) -> bytes, Index Store
+        self.blob_cache = BlobArrayCache(blob_cache_bytes)
         self.mem_entries = 0                   # global residency counter
         self._mem_lock = threading.Lock()
 
@@ -265,15 +268,17 @@ class LargeTable:
         """Batched key → position-marker resolution (§3.2 batched).
 
         Per cell (in cell-id order): check the in-memory buffer under the row
-        lock, short-circuit the remaining misses through the cell's Bloom
-        filter (vectorized — all key hashes are computed once up front), then
-        resolve disk-resident cells either by a single whole-blob read feeding
-        one ``optimistic_lookup`` kernel call across *all* such cells (their
-        concatenated u32 key prefixes stay globally sorted, §4.2), or — when
-        a cell is large relative to its query count, or keys are
-        variable-width/prefix-distributed — by the existing per-key windowed
-        path.  Returns raw markers aligned with ``keys`` (tombstone bits
-        preserved; ``None`` = absent).
+        lock, then resolve disk-resident cells either by whole-blob batched
+        resolution — the parsed blob comes from the memo cache or one pread,
+        feeding one ``optimistic_lookup`` kernel call across *all* such
+        cells (their concatenated u32 key prefixes stay globally sorted,
+        §4.2) — or, when a cell is large relative to its query count, or
+        keys are variable-width/prefix-distributed, by the per-key windowed
+        path behind a Bloom short-circuit.  Cells whose parsed blob is
+        already memoized skip the Bloom pass: their resolution is exact and
+        in-memory, so the filter could only add hashing work.  Returns raw
+        markers aligned with ``keys`` (tombstone bits preserved; ``None`` =
+        absent).
         """
         if not keys:
             return []
@@ -284,11 +289,6 @@ class LargeTable:
             self._perkey_resolve(ks, [(ks.cell_for_key(k, create=False), k)
                                       for k in uniq], out, use_bloom)
             return [out[k] for k in keys]
-
-        h1 = h2 = None
-        if use_bloom:
-            h1, h2 = key_hashes_many(uniq)
-        hash_of = {k: i for i, k in enumerate(uniq)}
 
         by_cell: dict = {}
         for k in uniq:
@@ -321,15 +321,19 @@ class LargeTable:
                     continue
                 snap = (cell.disk_pos, cell.disk_len, cell.disk_count)
                 bloom = cell.bloom
-            # Bloom pass outside the lock: the kernel's jit dispatch (and a
-            # first-shape compile) must not stall writers sharing this row
-            # lock.  The bits array only ever gains bits, so a concurrent
-            # add cannot produce a false negative for keys already present.
-            if bloom is not None and h1 is not None:
-                qi = np.fromiter((hash_of[k] for k in missing),
-                                 dtype=np.int64, count=len(missing))
-                ok = bloom.might_contain_many(
-                    missing, h1=h1[qi], h2=h2[qi], use_kernel=use_kernel)
+            blob_fmt_ok = ks.cfg.index_format in ("optimistic", "header")
+            memoized = blob_fmt_ok and snap[0] in self.blob_cache
+            if not memoized and use_bloom and bloom is not None:
+                # Bloom pass, outside the row lock (the kernel's jit
+                # dispatch — and a first-shape compile — must not stall
+                # writers sharing this row lock; the bits array only ever
+                # gains bits, so a concurrent add cannot produce a false
+                # negative for keys already present).  Cells whose parsed
+                # blob is memoized skip it: their exact resolution is
+                # already in memory, so the filter could only add hashing
+                # work — but for a cold cell it spares an all-absent batch
+                # the whole-blob read entirely.
+                ok = bloom.might_contain_many(missing, use_kernel=use_kernel)
                 self.metrics.add(bloom_negative=int((~ok).sum()))
                 for k, hit in zip(missing, ok):
                     if not hit:
@@ -338,10 +342,11 @@ class LargeTable:
                 if not missing:
                     continue
             # Cost model: one whole-blob read beats len(missing) windowed
-            # lookups iff the blob is smaller.
+            # lookups iff the blob is smaller — and a memoized blob costs
+            # no read at all, so it always wins.
             per_key_bytes = min(ks.cfg.window_entries * esz, snap[2] * esz)
-            if ks.cfg.index_format in ("optimistic", "header") and \
-                    len(missing) * per_key_bytes >= snap[2] * esz:
+            if memoized or (blob_fmt_ok and
+                            len(missing) * per_key_bytes >= snap[2] * esz):
                 blob_cells.append((cell, missing) + snap)
             else:
                 perkey.extend((cell, k) for k in missing)
@@ -354,28 +359,44 @@ class LargeTable:
 
     def _blob_resolve(self, ks: Keyspace, blob_cells, out, use_kernel,
                       perkey) -> None:
-        """Whole-blob batched resolution across cells: one pread per cell,
-        one parse + one kernel (or searchsorted) call over the concatenation."""
-        esz = entry_size(ks.cfg.key_len)
+        """Whole-blob batched resolution across cells: per cell, parsed
+        ``(u32, pos, keys)`` arrays come from the memo cache or one pread +
+        parse (then memoized); one kernel (or searchsorted) call runs over
+        the concatenation."""
+        key_len = ks.cfg.key_len
         fmt = ks.cfg.index_format
-        bufs, groups = [], []
+        parts = []                       # (missing, u32_c, pos_c, keys_c)
         for cell, missing, dpos, dlen, dcount in blob_cells:
-            pread = (lambda base, lim: lambda off, n:
-                     self._index_pread(base + off, min(n, lim - off)))(dpos, dlen)
-            buf, n = load_blob_arrays(pread, dcount, ks.cfg.key_len, fmt)
-            if n < dcount:              # short read (GC race): per-key retry
-                perkey.extend((cell, k) for k in missing)
-                continue
-            bufs.append(buf[:n * esz])
-            groups.append((missing, n))
-            self.metrics.add(batched_blob_reads=1)
-        if not bufs:
+            ent = self.blob_cache.get(dpos)
+            if ent is None:
+                pread = (lambda base, lim: lambda off, n:
+                         self._index_pread(base + off,
+                                           min(n, lim - off)))(dpos, dlen)
+                buf, n = load_blob_arrays(pread, dcount, key_len, fmt)
+                if n < dcount:          # short read (GC race): per-key retry
+                    perkey.extend((cell, k) for k in missing)
+                    continue
+                u32_c, pos_c, keys_c, nbytes = blob_to_arrays(buf, n, key_len)
+                if cell.disk_pos == dpos:
+                    # A flush that raced this read already invalidated dpos
+                    # and swapped the cell to a new blob; memoizing the old
+                    # one would strand dead budget until LRU aging.
+                    self.blob_cache.put(dpos, (u32_c, pos_c, keys_c), nbytes)
+                self.metrics.add(batched_blob_reads=1)
+            else:
+                u32_c, pos_c, keys_c = ent
+                self.metrics.add(blob_cache_hits=1)
+            parts.append((missing, u32_c, pos_c, keys_c))
+        if not parts:
             return
-        buf_cat = b"".join(bufs)
-        total = sum(n for _, n in groups)
-        cols, pos = _buf_to_cols(buf_cat, total, ks.cfg.key_len)
-        u32 = u32_prefixes(cols)
-        queries = [k for missing, _ in groups for k in missing]
+        u32 = (parts[0][1] if len(parts) == 1
+               else np.concatenate([p[1] for p in parts]))
+        pos = (parts[0][2] if len(parts) == 1
+               else np.concatenate([p[2] for p in parts]))
+        keybuf = (parts[0][3] if len(parts) == 1
+                  else b"".join(p[3] for p in parts))
+        total = len(u32)
+        queries = [k for missing, _, _, _ in parts for k in missing]
         q32 = np.frombuffer(
             b"".join(k[:4].ljust(4, b"\x00") for k in queries),
             dtype=">u4").astype(np.uint32)
@@ -389,22 +410,39 @@ class LargeTable:
             safe = np.minimum(idx, total - 1)
             found = (idx < total) & (u32[safe] == q32)
         self.metrics.add(index_lookups=len(queries))
-        key_len = ks.cfg.key_len
-        for k, q, i, hit in zip(queries, q32, idx, found):
+        # Vectorized full-key verification: in the common case (no u32
+        # prefix collision) the landing index either IS the query key or
+        # the key is absent — one gathered row compare decides all queries
+        # at once.  Only collision runs fall back to the per-query walk.
+        idx = np.asarray(idx, dtype=np.int64)
+        found = np.asarray(found, dtype=bool)
+        safe = np.minimum(idx, total - 1)
+        if all(len(k) == key_len for k in queries):
+            qmat = np.frombuffer(b"".join(queries),
+                                 np.uint8).reshape(len(queries), key_len)
+            karr = np.frombuffer(keybuf, np.uint8).reshape(total, key_len)
+            exact = found & (karr[safe] == qmat).all(axis=1)
+        else:
+            exact = np.zeros(len(queries), dtype=bool)
+        has_run = found & ~exact
+        for qi in np.flatnonzero(exact):
+            out[queries[qi]] = int(pos[safe[qi]])
+        for qi in np.flatnonzero(~found):
+            out[queries[qi]] = None
+        for qi in np.flatnonzero(has_run):
+            k, q, j = queries[qi], q32[qi], int(idx[qi])
             marker = None
-            if hit:
-                j = int(i)
-                # The kernel may land mid-run when several keys share a u32
-                # prefix (its window rank counts strictly-smaller entries
-                # from the window start, not the array start): rewind to the
-                # run's first entry, then walk forward comparing full keys.
-                while j > 0 and u32[j - 1] == q:
-                    j -= 1
-                while j < total and u32[j] == q:
-                    if buf_cat[j * esz:j * esz + key_len] == k:
-                        marker = int(pos[j])
-                        break
-                    j += 1
+            # The kernel may land mid-run when several keys share a u32
+            # prefix (its window rank counts strictly-smaller entries
+            # from the window start, not the array start): rewind to the
+            # run's first entry, then walk forward comparing full keys.
+            while j > 0 and u32[j - 1] == q:
+                j -= 1
+            while j < total and u32[j] == q:
+                if keybuf[j * key_len:(j + 1) * key_len] == k:
+                    marker = int(pos[j])
+                    break
+                j += 1
             out[k] = marker
 
     def _perkey_resolve(self, ks: Keyspace, work, out, use_bloom) -> None:

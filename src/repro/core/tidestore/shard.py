@@ -1,0 +1,231 @@
+"""ShardedTideDB — static key-space sharding behind the ``Engine`` protocol.
+
+Phase-1 scale-out (cf. Neon's static key-space sharding RFC, PAPERS.md):
+keys partition across N independent ``TideDB`` shards by a stable hash of
+the key; each shard owns its own Value WAL, Index Store, Large Table, and
+cache, so shards share *nothing* and batched reads fan out across a thread
+pool — the row-lock discipline already makes per-shard work independent,
+and the heavy lifting in each shard (preads, numpy parsing, jitted kernel
+dispatch) drops the GIL.
+
+Semantics vs a single ``TideDB``:
+
+- ``get``/``put``/``delete``/``exists``/``multi_get``/``multi_exists``
+  are exact: the shard function is deterministic, so every key always
+  resolves through the same shard.
+- ``write_batch`` is atomic *per shard*: ops split into one
+  ``Wal.append_batch`` per shard, so a crash can admit a subset of shards'
+  sub-batches.  Single-shard batches (including every per-handle batch
+  whose keys land together) keep full atomicity.
+- ``prev`` consults every shard and returns the globally largest
+  predecessor.
+- WAL positions (returned by writes, used by ``ReadOptions.min_live_pin``)
+  are *per-shard* byte offsets.  ``min_live()`` returns the most
+  conservative (minimum) floor across shards; cross-shard snapshot pinning
+  is an open item (ROADMAP).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+from .api import (KeyspaceHandle, ReadOptions, WriteBatch, WriteOptions,
+                  coerce_batch)
+from .db import DbConfig, TideDB
+
+
+def _per_shard_config(cfg: DbConfig, n_shards: int) -> DbConfig:
+    """Each shard holds ~1/N of the keys, so divide the pre-allocated cell
+    array (uniform keyspaces) and the per-store resource budgets (value
+    LRU, blob memo, Large Table residency, flusher threads) accordingly —
+    the *aggregate* footprint and per-cell occupancy then match a
+    single-store deployment, and neither the per-cell costs of a batched
+    read nor the memory budget multiply by N."""
+    keyspaces = [dataclasses.replace(ks, n_cells=max(8, ks.n_cells // n_shards))
+                 if ks.distribution == "uniform" else ks
+                 for ks in cfg.keyspaces]
+    return dataclasses.replace(
+        cfg, keyspaces=keyspaces,
+        cache_bytes=cfg.cache_bytes // n_shards,
+        blob_cache_bytes=cfg.blob_cache_bytes // n_shards,
+        mem_budget_entries=max(1, cfg.mem_budget_entries // n_shards),
+        flusher_threads=max(1, cfg.flusher_threads // n_shards))
+
+
+class ShardedTideDB:
+    """N ``TideDB`` shards behind one ``Engine`` surface."""
+
+    def __init__(self, path: str, config: Optional[DbConfig] = None, *,
+                 n_shards: int = 4, threads: Optional[int] = None,
+                 scale_cells: bool = True):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.path = path
+        self.cfg = config or DbConfig()
+        self.n_shards = n_shards
+        shard_cfg = (_per_shard_config(self.cfg, n_shards) if scale_cells
+                     else self.cfg)
+        os.makedirs(path, exist_ok=True)
+        self.shards = [TideDB(os.path.join(path, f"shard-{i:02d}"), shard_cfg)
+                       for i in range(n_shards)]
+        self._pool = ThreadPoolExecutor(max_workers=threads or n_shards,
+                                        thread_name_prefix="tide-shard")
+        self._closed = False
+
+    # ------------------------------------------------------------- routing
+    def shard_of(self, key: bytes) -> int:
+        """Stable key → shard map.  crc32 (not the cell hash: the Large
+        Table cells key on the first 4 bytes) keeps each shard's key
+        distribution uniform over the whole keyspace, which the optimistic
+        index's interpolation search relies on."""
+        return (zlib.crc32(key) * self.n_shards) >> 32
+
+    def _group_indices(self, keys) -> dict[int, list[int]]:
+        groups: dict[int, list[int]] = {}
+        for i, k in enumerate(keys):
+            groups.setdefault(self.shard_of(k), []).append(i)
+        return groups
+
+    def _ks_id(self, keyspace) -> int:
+        return self.shards[0]._ks_id(keyspace)
+
+    def keyspace(self, name) -> KeyspaceHandle:
+        self._ks_id(name)                    # validate eagerly
+        return KeyspaceHandle(self, name)
+
+    # --------------------------------------------------------------- reads
+    def get(self, key: bytes, keyspace=0,
+            opts: Optional[ReadOptions] = None):
+        return self.shards[self.shard_of(key)].get(key, keyspace, opts=opts)
+
+    def exists(self, key: bytes, keyspace=0,
+               opts: Optional[ReadOptions] = None) -> bool:
+        return self.shards[self.shard_of(key)].exists(key, keyspace, opts=opts)
+
+    def multi_get(self, keys, keyspace=0,
+                  opts: Optional[ReadOptions] = None) -> list:
+        return self._multi(keys, keyspace, opts, "multi_get", None)
+
+    def multi_exists(self, keys, keyspace=0,
+                     opts: Optional[ReadOptions] = None) -> list:
+        return self._multi(keys, keyspace, opts, "multi_exists", False)
+
+    def _multi(self, keys, keyspace, opts, method: str, default) -> list:
+        """Fan a batched read per shard across the pool; merge aligned."""
+        if not keys:
+            return []
+        groups = self._group_indices(keys)
+        if len(groups) == 1:
+            ((sid, _),) = groups.items()
+            return getattr(self.shards[sid], method)(keys, keyspace, opts=opts)
+        if opts is None or opts.use_kernel is None:
+            # Concurrent jit dispatch from shard threads serializes on the
+            # runtime's internal locks (and the GIL); the host resolution
+            # path releases the GIL in its numpy bulk work instead.  An
+            # explicit ReadOptions(use_kernel=True) overrides.
+            opts = dataclasses.replace(opts or ReadOptions(),
+                                       use_kernel=False)
+        def work(sid, idx):
+            # Sub-list construction runs inside the worker too, so the main
+            # thread only fans out and merges.
+            return getattr(self.shards[sid], method)(
+                [keys[i] for i in idx], keyspace, opts)
+
+        futures = {sid: self._pool.submit(work, sid, idx)
+                   for sid, idx in groups.items()}
+        results = [default] * len(keys)
+        for sid, idx in groups.items():
+            for i, v in zip(idx, futures[sid].result()):
+                results[i] = v
+        return results
+
+    def prev(self, key: bytes, keyspace=0):
+        """Globally largest (key', value) with key' < key: every shard may
+        hold the predecessor, so ask all of them and take the max."""
+        futures = [self._pool.submit(sh.prev, key, keyspace)
+                   for sh in self.shards]
+        best = None
+        for f in futures:
+            got = f.result()
+            if got is not None and (best is None or got[0] > best[0]):
+                best = got
+        return best
+
+    # -------------------------------------------------------------- writes
+    def put(self, key: bytes, value: bytes, keyspace=0, epoch: int = 0,
+            opts: Optional[WriteOptions] = None) -> int:
+        return self.shards[self.shard_of(key)].put(key, value, keyspace,
+                                                   epoch, opts=opts)
+
+    def delete(self, key: bytes, keyspace=0, epoch: int = 0,
+               opts: Optional[WriteOptions] = None) -> int:
+        return self.shards[self.shard_of(key)].delete(key, keyspace, epoch,
+                                                      opts=opts)
+
+    def write_batch(self, ops, epoch: int = 0,
+                    opts: Optional[WriteOptions] = None) -> list:
+        """Split ops per shard; one atomic ``append_batch`` per shard.
+        Returns per-shard WAL positions aligned with the ops."""
+        batch = coerce_batch(ops)
+        if not batch:
+            return []
+        per_shard: dict[int, list[tuple[int, tuple]]] = {}
+        for j, op in enumerate(batch.ops):
+            per_shard.setdefault(self.shard_of(op[2]), []).append((j, op))
+        positions: list = [None] * len(batch.ops)
+        futures = []
+        for sid, items in per_shard.items():
+            wb = WriteBatch().extend(op for _, op in items)
+            futures.append((items, self._pool.submit(
+                self.shards[sid].write_batch, wb, epoch, opts)))
+        for items, f in futures:
+            for (j, _), pos in zip(items, f.result()):
+                positions[j] = pos
+        return positions
+
+    # ----------------------------------------------------------- lifecycle
+    def min_live(self) -> int:
+        return min(sh.min_live() for sh in self.shards)
+
+    def flush(self) -> None:
+        for f in [self._pool.submit(sh.flush) for sh in self.shards]:
+            f.result()
+
+    def snapshot_now(self, flush_threshold: int = 1) -> list[dict]:
+        futures = [self._pool.submit(sh.snapshot_now, flush_threshold)
+                   for sh in self.shards]
+        return [f.result() for f in futures]
+
+    def prune_epochs_below(self, epoch: int) -> int:
+        return sum(sh.prune_epochs_below(epoch) for sh in self.shards)
+
+    def clear_caches(self) -> None:
+        """Benchmark/test hook: drop every shard's value LRU."""
+        for sh in self.shards:
+            sh.cache.clear()
+
+    def stats(self) -> dict:
+        """Merged counters: numeric values sum across shards."""
+        out: dict = {"n_shards": self.n_shards}
+        for sh in self.shards:
+            for k, v in sh.stats().items():
+                if isinstance(v, (int, float)):
+                    out[k] = out.get(k, 0) + v
+        return out
+
+    def close(self, flush: bool = True) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for f in [self._pool.submit(sh.close, flush) for sh in self.shards]:
+            f.result()
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

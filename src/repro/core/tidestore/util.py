@@ -66,6 +66,7 @@ class Metrics:
     batched_kernel_lookups: int = 0    # queries resolved via Pallas kernel
     batched_read_keys: int = 0         # keys entering multi_get/multi_exists
     batched_read_runs: int = 0         # coalesced WAL pread runs issued
+    blob_cache_hits: int = 0           # memoized parsed-blob reuses
     bloom_negative: int = 0
     cache_hits: int = 0
     cache_misses: int = 0

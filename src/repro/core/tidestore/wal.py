@@ -36,6 +36,8 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Iterator, Optional
 
+import numpy as np
+
 from .util import Metrics, PositionTracker, crc32
 
 # Record types.
@@ -295,11 +297,34 @@ class Wal:
             start = run[0]
             buf = self._pread_raw(start, run[-1] + HEADER_SIZE - start)
             self.metrics.add(batched_read_runs=1)
-            for p in run:
-                off = p - start
-                if off + HEADER_SIZE > len(buf):
+            # Header parse: one fancy-indexing gather for long runs (the
+            # numpy fixed cost amortizes), per-record struct unpacks below
+            # that.
+            if len(run) >= 32 and len(buf) >= HEADER_SIZE:
+                offs = np.asarray(run, dtype=np.int64) - start
+                ok = offs + HEADER_SIZE <= len(buf)
+                safe = np.where(ok, offs, 0)
+                bufn = np.frombuffer(buf, dtype=np.uint8)
+                hdrs = bufn[safe[:, None] + np.arange(HEADER_SIZE)]
+                rtypes = hdrs[:, 0].astype(np.int64)
+                lengths = hdrs[:, 1:5].copy().view("<u4").reshape(-1)
+                crcs = hdrs[:, 5:9].copy().view("<u4").reshape(-1)
+                parsed = [(int(offs[i]), int(rtypes[i]), int(lengths[i]),
+                           int(crcs[i])) if ok[i] else None
+                          for i in range(len(run))]
+            else:
+                parsed = []
+                for p in run:
+                    off = p - start
+                    if off + HEADER_SIZE > len(buf):
+                        parsed.append(None)
+                        continue
+                    rtype, length, crc = _HDR.unpack_from(buf, off)
+                    parsed.append((off, rtype, length, crc))
+            for p, rec in zip(run, parsed):
+                if rec is None:
                     continue                      # short read: caller retries
-                rtype, length, crc = _HDR.unpack_from(buf, off)
+                off, rtype, length, crc = rec
                 if p % seg_size + HEADER_SIZE + length > seg_size:
                     continue                      # impossible span: stale pos
                 payload = bytes(buf[off + HEADER_SIZE:

@@ -9,11 +9,15 @@ Requests are queued, admitted into free batch slots, decoded step-by-step
 with greedy/temperature sampling, and retired on EOS or length budget;
 retirement is an epoch event: all the sequence's blocks expire at once.
 
-``KvBatchServer`` is the storage-side twin: continuous batching for KV
-*reads*.  Queued get/exists requests are drained once per step into a
-single ``TideDB.multi_get`` / ``multi_exists`` call, so the serve path
-issues batched reads through the Pallas-kernel pipeline instead of N
-scalar round trips (§3.2's 1.7×/15.6× wins at serving scale).
+``KvBatchServer`` is the storage-side twin: continuous batching for a
+*mixed* KV stream over any ``Engine`` (embedded ``TideDB`` or the sharded
+``ShardedTideDB``).  Queued get/exists/put/delete requests keep one queue
+discipline: each step drains a batch and serves it as maximal same-kind
+runs in arrival order — reads collapse into ``multi_get``/``multi_exists``
+calls (§3.2's 1.7×/15.6× wins at serving scale), writes collapse into one
+``write_batch`` (one WAL allocation; one per-shard ``append_batch`` when
+the engine is sharded).  Run boundaries preserve scalar semantics: a read
+submitted after a write to the same key always observes it.
 """
 from __future__ import annotations
 
@@ -21,14 +25,14 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.tidestore.api import WriteBatch
 from repro.models import serve as serve_mod
-from repro.models import transformer as T
 from repro.models.base import ModelConfig
 
 
@@ -61,65 +65,153 @@ class KvRead:
         return self.found if self.op == "exists" else self.value
 
 
-class KvBatchServer:
-    """Continuous batching for KV reads over a ``TideDB``.
+@dataclasses.dataclass
+class KvWrite:
+    """A pending batched write; ``pos`` (the WAL position — per-shard when
+    the engine is sharded) is set once the step's ``write_batch`` lands."""
+    key: bytes
+    value: Optional[bytes] = None       # None for deletes
+    keyspace: int = 0
+    op: str = "put"                     # "put" | "delete"
+    pos: Optional[int] = None
+    done: bool = False
+    t_submit: float = dataclasses.field(default_factory=time.time)
+    t_done: Optional[float] = None
 
-    Clients ``submit_get``/``submit_exists``; each ``step`` drains up to
-    ``max_batch`` queued requests per op kind and serves them with ONE
-    ``multi_get``/``multi_exists`` call — the storage analogue of the decode
-    engine's slot batching.  Single-threaded step loop by design; submission
-    is thread-safe.
+    def result(self):
+        return self.pos
+
+
+class KvBatchServer:
+    """Continuous batching for a mixed KV stream over any ``Engine``.
+
+    Clients ``submit_get``/``submit_exists``/``submit_put``/
+    ``submit_delete``; each ``step`` drains up to ``max_batch`` queued
+    requests and serves them as maximal same-kind *runs* in arrival order:
+    a read run becomes one ``multi_get``/``multi_exists`` per (op,
+    keyspace) group, a write run becomes ONE ``write_batch`` — the storage
+    analogue of the decode engine's slot batching.  Run boundaries keep
+    scalar semantics: reads never jump over an earlier write to the same
+    key (and batched results are identical to scalar execution).
+    Single-threaded step loop by design; submission is thread-safe.
     """
 
     def __init__(self, db, *, max_batch: int = 256):
         self.db = db
         self.max_batch = max_batch
         self._lock = threading.Lock()
-        self.queue: collections.deque[KvRead] = collections.deque()
+        self.queue: collections.deque = collections.deque()
         self.batches_served = 0
         self.keys_served = 0
+        self.writes_served = 0
+
+    def _submit(self, req):
+        # Validate the keyspace here so a bad spelling raises to the
+        # submitter instead of poisoning a whole drained batch in step().
+        norm = getattr(self.db, "_ks_id", None)
+        if norm is not None:
+            norm(req.keyspace)
+        with self._lock:
+            self.queue.append(req)
+        return req
 
     def submit_get(self, key: bytes, keyspace=0) -> KvRead:
-        req = KvRead(key=key, keyspace=keyspace, op="get")
-        with self._lock:
-            self.queue.append(req)
-        return req
+        return self._submit(KvRead(key=key, keyspace=keyspace, op="get"))
 
     def submit_exists(self, key: bytes, keyspace=0) -> KvRead:
-        req = KvRead(key=key, keyspace=keyspace, op="exists")
-        with self._lock:
-            self.queue.append(req)
-        return req
+        return self._submit(KvRead(key=key, keyspace=keyspace, op="exists"))
+
+    def submit_put(self, key: bytes, value: bytes, keyspace=0) -> KvWrite:
+        return self._submit(KvWrite(key=key, value=value, keyspace=keyspace,
+                                    op="put"))
+
+    def submit_delete(self, key: bytes, keyspace=0) -> KvWrite:
+        return self._submit(KvWrite(key=key, keyspace=keyspace, op="delete"))
 
     def step(self) -> int:
-        """Serve one formed batch per op kind; returns requests completed."""
+        """Serve one drained batch as ordered same-kind stages; returns
+        requests completed.
+
+        Ops schedule into the earliest same-kind stage that keeps per-key
+        program order: a read and a write to the same (keyspace, key) never
+        reorder, and same-key writes keep their submission order (last
+        write wins).  Ops on unrelated keys commute freely, so a mixed
+        stream still forms large batches instead of breaking at every
+        read/write boundary — while results stay identical to scalar
+        execution.
+        """
         with self._lock:
             take = [self.queue.popleft()
                     for _ in range(min(self.max_batch, len(self.queue)))]
         if not take:
             return 0
-        served = 0
-        # One multi-call per (op, keyspace) group present in the batch.
-        groups: dict[tuple, list[KvRead]] = {}
+        # Conflict keys normalize the keyspace (engines accept an index or
+        # a name for the same keyspace; both spellings must collide here).
+        norm = getattr(self.db, "_ks_id", lambda ks: ks)
+        stages: list[tuple[bool, list, set]] = []   # (is_write, ops, keys)
         for r in take:
+            is_write = isinstance(r, KvWrite)
+            rk = (norm(r.keyspace), r.key)
+            floor = 0                    # first stage index this op may join
+            for si in range(len(stages) - 1, -1, -1):
+                s_write, _, s_keys = stages[si]
+                if rk in s_keys and s_write != is_write:
+                    floor = si + 1       # read/write on same key: keep order
+                    break
+                if rk in s_keys and s_write and is_write:
+                    floor = si           # write/write same key: same stage ok
+                    break
+            for si in range(floor, len(stages)):
+                if stages[si][0] == is_write:
+                    stages[si][1].append(r)
+                    stages[si][2].add(rk)
+                    break
+            else:
+                stages.append((is_write, [r], {rk}))
+        served = 0
+        for is_write, ops, _ in stages:
+            served += (self._serve_writes(ops) if is_write
+                       else self._serve_reads(ops))
+        return served
+
+    def _serve_reads(self, reqs: list) -> int:
+        # One multi-call per (op, keyspace) group present in the run.
+        groups: dict[tuple, list[KvRead]] = {}
+        for r in reqs:
             groups.setdefault((r.op, r.keyspace), []).append(r)
-        for (op, ks), reqs in groups.items():
-            keys = [r.key for r in reqs]
+        for (op, ks), group in groups.items():
+            keys = [r.key for r in group]
             if op == "get":
                 values = self.db.multi_get(keys, keyspace=ks)
-                for r, v in zip(reqs, values):
+                for r, v in zip(group, values):
                     r.value, r.found = v, v is not None
             else:
                 flags = self.db.multi_exists(keys, keyspace=ks)
-                for r, f in zip(reqs, flags):
+                for r, f in zip(group, flags):
                     r.found = f
             now = time.time()
-            for r in reqs:
+            for r in group:
                 r.done, r.t_done = True, now
-            served += len(reqs)
             self.batches_served += 1
-            self.keys_served += len(reqs)
-        return served
+            self.keys_served += len(group)
+        return len(reqs)
+
+    def _serve_writes(self, reqs: list) -> int:
+        # The whole run is ONE write_batch (one WAL allocation; the sharded
+        # engine further splits it into one append_batch per shard).
+        wb = WriteBatch()
+        for r in reqs:
+            if r.op == "put":
+                wb.put(r.key, r.value, keyspace=r.keyspace)
+            else:
+                wb.delete(r.key, keyspace=r.keyspace)
+        positions = self.db.write_batch(wb)
+        now = time.time()
+        for r, pos in zip(reqs, positions):
+            r.pos, r.done, r.t_done = pos, True, now
+        self.batches_served += 1
+        self.writes_served += len(reqs)
+        return len(reqs)
 
     def run_until_drained(self, max_steps: int = 100_000) -> int:
         total = 0
@@ -131,11 +223,15 @@ class KvBatchServer:
         return total
 
     def stats(self) -> dict:
+        with self._lock:                 # consistent vs concurrent submitters
+            queued = len(self.queue)
         return {"batches_served": self.batches_served,
                 "keys_served": self.keys_served,
-                "mean_batch": (self.keys_served / self.batches_served
+                "writes_served": self.writes_served,
+                "mean_batch": ((self.keys_served + self.writes_served)
+                               / self.batches_served
                                if self.batches_served else 0.0),
-                "queued": len(self.queue)}
+                "queued": queued}
 
 
 class ServingEngine:
@@ -149,6 +245,7 @@ class ServingEngine:
         self.max_seq = max_seq
         self.queue: collections.deque[Request] = collections.deque()
         self.active: dict[int, Request] = {}        # slot -> request
+        self._retired_sink: Optional[list] = None   # set by run_until_drained
         self.cache = serve_mod.init_cache(cfg, batch_slots, max_seq)
         self.rng = jax.random.PRNGKey(seed)
         self.segments_recycled = 0
@@ -231,6 +328,8 @@ class ServingEngine:
         req = self.active.pop(slot)
         req.done = True
         req.t_done = time.time()
+        if self._retired_sink is not None:
+            self._retired_sink.append(req)
         blocks_used = int(np.ceil(
             float(self.cache["seq_lens"][slot]) / self.cfg.kv_block))
         self.segments_recycled += blocks_used
@@ -238,9 +337,15 @@ class ServingEngine:
         self.cache["first_live"] = self.cache["first_live"].at[slot].set(0)
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        """Step until idle; returns the requests retired during this call
+        in completion order (nothing is retained after the call returns)."""
         done: list[Request] = []
-        steps = 0
-        while (self.queue or self.active) and steps < max_steps:
-            self.step()
-            steps += 1
+        prev_sink, self._retired_sink = self._retired_sink, done
+        try:
+            steps = 0
+            while (self.queue or self.active) and steps < max_steps:
+                self.step()
+                steps += 1
+        finally:
+            self._retired_sink = prev_sink
         return done

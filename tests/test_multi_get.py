@@ -84,6 +84,12 @@ class TestMultiGetAgreement:
             assert after["batched_kernel_lookups"] > \
                 before["batched_kernel_lookups"]
             assert after["bloom_negative"] > before["bloom_negative"]
+            # A repeat batch serves from the parsed-blob memo cache —
+            # no new blob reads, and memoized cells skip the Bloom pass.
+            assert_agrees(db, probes)
+            final = db.metrics.snapshot()
+            assert final["blob_cache_hits"] > 0
+            assert final["batched_blob_reads"] == after["batched_blob_reads"]
 
     def test_kernel_off_agrees(self, tmpdir):
         with TideDB(tmpdir, small_cfg(batched_kernels=False,
@@ -224,6 +230,16 @@ class TestWalBatchRead:
             assert got[p] == wal.read_record(p)
         # bogus positions are absent, not wrong
         assert wal.read_records_batch([positions[-1] + 3]) == {}
+        wal.close()
+
+    def test_long_run_on_missing_segment_is_empty(self, tmpdir):
+        """A >=32-position run whose segment vanished (GC race) must come
+        back empty, not crash the vectorized header parse."""
+        wal = Wal(tmpdir, "value", WalConfig(segment_size=16 * 1024,
+                                             background=False,
+                                             preallocate=False))
+        ghosts = list(range(0, 40 * 20, 20))     # one coalesced run of 40
+        assert wal.read_records_batch(ghosts) == {}
         wal.close()
 
 

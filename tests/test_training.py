@@ -178,10 +178,13 @@ class TestServingEngine:
         eng = ServingEngine(cfg, params, batch_slots=2, max_seq=64)
         reqs = [eng.submit(np.arange(3 + i) % cfg.vocab, max_new_tokens=5)
                 for i in range(5)]
-        eng.run_until_drained()
+        done = eng.run_until_drained()
+        assert sorted(r.rid for r in done) == sorted(r.rid for r in reqs)
         assert all(r.done for r in reqs)
         assert all(len(r.out_tokens) == 5 for r in reqs)
         assert eng.segments_recycled > 0          # epoch expiry happened
+        # a second drain has nothing new to retire
+        assert eng.run_until_drained() == []
 
     def test_greedy_matches_decode_path(self):
         """Engine output == manual prefill+decode greedy rollout."""
