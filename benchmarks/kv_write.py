@@ -1,0 +1,180 @@
+"""kvwrite suite: the vectorized write pipeline's throughput trajectory.
+
+Measures scalar ``put`` vs ``put_many`` vs batched ``write_batch`` on a
+fresh store per mode (insert workloads stay comparable), across value
+sizes 128 B–16 KB and batch sizes, on the async-durability path, plus a
+small sync-durability probe (where batching amortizes the fsync, not just
+the allocation lock).  Acceptance bar: ``put_many``/``write_batch`` ≥ 5×
+scalar ``put`` at batch ≥ 256 with 1 KB values, async durability.
+
+Emits ``BENCH_kvwrite.json`` so the write-perf trajectory records across
+PRs.  Schema (``kvwrite/v1``)::
+
+    {
+      "schema": "kvwrite/v1",
+      "engine": "tidehunter",
+      "n_ops": 4096,
+      "results": [
+        {"mode": "scalar|put_many|write_batch",
+         "value_size": 1024,            # bytes per value
+         "batch": 256,                  # 1 for scalar
+         "durability": "async|sync",
+         "us_per_op": 12.3,
+         "ops_per_s": 81000.0,
+         "speedup_vs_scalar": 6.8},     # vs same (value_size, durability)
+        ...
+      ]
+    }
+
+``python -m benchmarks.kv_write --smoke`` runs a tiny configuration and
+exits non-zero unless batched ≥ scalar throughput — a CI sanity bound on
+the pipeline's shape, deliberately far below the 5× acceptance bar so it
+never flakes on loaded runners.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from .engines import Bench, gen_keys, make_tide
+
+VALUE_SIZES = (128, 1024, 16384)
+BATCH_SIZES = (64, 256, 1024)
+
+
+def _fresh(factory):
+    return Bench("tidehunter", factory)
+
+
+def _time_scalar(factory, keys, value, opts) -> float:
+    b = _fresh(factory)
+    t0 = time.perf_counter()
+    if opts is None:
+        for k in keys:
+            b.db.put(k, value)
+    else:
+        for k in keys:
+            b.db.put(k, value, opts=opts)
+    dt = time.perf_counter() - t0
+    b.close()
+    return dt
+
+
+def _time_put_many(factory, keys, value, bs, opts) -> float:
+    b = _fresh(factory)
+    t0 = time.perf_counter()
+    for off in range(0, len(keys), bs):
+        b.db.put_many([(k, value) for k in keys[off:off + bs]], opts=opts)
+    dt = time.perf_counter() - t0
+    b.close()
+    return dt
+
+
+def _time_write_batch(factory, keys, value, bs, opts) -> float:
+    from repro.core.tidestore.api import WriteBatch
+    b = _fresh(factory)
+    t0 = time.perf_counter()
+    for off in range(0, len(keys), bs):
+        wb = WriteBatch()
+        for k in keys[off:off + bs]:
+            wb.put(k, value)
+        b.db.write_batch(wb, opts=opts)
+    dt = time.perf_counter() - t0
+    b.close()
+    return dt
+
+
+def run(n_ops: int = 4096, value_sizes=VALUE_SIZES, batch_sizes=BATCH_SIZES,
+        sync_probe: bool = True, sync_ops: int = 192, csv=print,
+        json_path: str | None = "BENCH_kvwrite.json",
+        factory=make_tide) -> dict:
+    """Returns ``{(value_size, durability): {mode: {batch: speedup}}}`` and
+    (optionally) writes the ``kvwrite/v1`` JSON trajectory."""
+    from repro.core.tidestore.api import WriteOptions
+
+    results: list[dict] = []
+    speedups: dict = {}
+
+    def record(mode, vs, bs, durability, dt, nops, scalar_dt):
+        sp = scalar_dt / dt if dt > 0 else 0.0
+        results.append({"mode": mode, "value_size": vs, "batch": bs,
+                        "durability": durability,
+                        "us_per_op": dt / nops * 1e6,
+                        "ops_per_s": nops / dt,
+                        "speedup_vs_scalar": sp})
+        tag = f"kvwrite.v{vs}.{durability}.{mode}" + \
+              (f".b{bs}" if bs > 1 else "")
+        csv(f"{tag},{dt/nops*1e6:.2f},{nops/dt:.0f} ops/s"
+            + (f" ({sp:.1f}x scalar)" if bs > 1 else ""))
+        return sp
+
+    from repro.core.tidestore.wal import _ENTRY_HDR, HEADER_SIZE
+
+    from .engines import _tide_cfg
+    seg_size = _tide_cfg().wal.segment_size
+
+    configs = [(vs, "async", n_ops, None) for vs in value_sizes]
+    if sync_probe:
+        configs.append((1024, "sync", sync_ops,
+                        WriteOptions(durability="sync")))
+    for vs, durability, nops, opts in configs:
+        keys = gen_keys(nops, seed=vs + (1 if durability == "sync" else 0))
+        value = bytes(vs)
+        scalar_dt = _time_scalar(factory, keys, value, opts)
+        record("scalar", vs, 1, durability, scalar_dt, nops, scalar_dt)
+        per_mode: dict = {"put_many": {}, "write_batch": {}}
+        for bs in batch_sizes:
+            if bs > nops:
+                continue
+            dt = _time_put_many(factory, keys, value, bs, opts)
+            per_mode["put_many"][bs] = record("put_many", vs, bs, durability,
+                                              dt, nops, scalar_dt)
+            # write_batch is ONE atomic T_BATCH record, which cannot exceed
+            # a segment — put_many has no such limit (records in a batch
+            # are independent), a trajectory point worth keeping visible.
+            body = HEADER_SIZE + bs * (HEADER_SIZE + _ENTRY_HDR.size
+                                       + len(keys[0]) + vs)
+            if body > seg_size:
+                csv(f"kvwrite.v{vs}.{durability}.write_batch.b{bs},0,"
+                    f"skipped (atomic batch of {body} B exceeds "
+                    f"{seg_size} B segment; use put_many)")
+                continue
+            dt = _time_write_batch(factory, keys, value, bs, opts)
+            per_mode["write_batch"][bs] = record("write_batch", vs, bs,
+                                                 durability, dt, nops,
+                                                 scalar_dt)
+        speedups[(vs, durability)] = per_mode
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"schema": "kvwrite/v1", "engine": "tidehunter",
+                       "n_ops": n_ops, "results": results}, f, indent=1)
+        csv(f"kvwrite.json,0,{json_path}")
+    return speedups
+
+
+def run_smoke(csv=print) -> bool:
+    """CI sanity bound: batched write throughput must not lose to scalar.
+
+    Tiny sizes, one batch size, no JSON — asserts speedup ≥ 1.0 (the real
+    acceptance bar is ≥ 5×; this bound exists to catch pipeline
+    regressions without becoming a flaky timing gate)."""
+    speedups = run(n_ops=512, value_sizes=(128,), batch_sizes=(256,),
+                   sync_probe=False, csv=csv, json_path=None)
+    per_mode = speedups[(128, "async")]
+    ok = all(sp >= 1.0 for mode in per_mode.values() for sp in mode.values())
+    csv(f"kvwrite.smoke,0,{'ok' if ok else 'FAIL: batched < scalar'}")
+    return ok
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run; exit 1 unless batched >= scalar")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(0 if run_smoke() else 1)
+    run()

@@ -16,3 +16,9 @@ else
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# Write-pipeline smoke: tiny kvwrite run asserting batched >= scalar
+# throughput.  A sanity bound on the pipeline's shape (the real acceptance
+# bar is >=5x, checked by `python -m benchmarks.run --only kvwrite`), far
+# enough below it that loaded CI runners can't flake it.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kv_write --smoke

@@ -181,6 +181,15 @@ class KeyspaceHandle:
     def delete(self, key: bytes, opts: Optional[WriteOptions] = None) -> int:
         return self.engine.delete(key, keyspace=self.name, opts=opts)
 
+    def put_many(self, items, opts: Optional[WriteOptions] = None) -> list:
+        """Batched put of (key, value) pairs — the vectorized write
+        pipeline.  NOT atomic (each record replays independently); use
+        ``write_batch`` for all-or-nothing semantics."""
+        return self.engine.put_many(items, keyspace=self.name, opts=opts)
+
+    def delete_many(self, keys, opts: Optional[WriteOptions] = None) -> list:
+        return self.engine.delete_many(keys, keyspace=self.name, opts=opts)
+
     def batch(self) -> WriteBatch:
         """A ``WriteBatch`` whose ops default to this keyspace."""
         return WriteBatch(default_keyspace=self.name)
@@ -224,6 +233,12 @@ class Engine(Protocol):
 
     def delete(self, key: bytes, keyspace=0,
                opts: Optional[WriteOptions] = None) -> int: ...
+
+    def put_many(self, items, keyspace=0,
+                 opts: Optional[WriteOptions] = None) -> list: ...
+
+    def delete_many(self, keys, keyspace=0,
+                    opts: Optional[WriteOptions] = None) -> list: ...
 
     def write_batch(self, ops,
                     opts: Optional[WriteOptions] = None) -> list: ...

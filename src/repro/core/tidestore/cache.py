@@ -61,6 +61,16 @@ class LruCache:
             if v is not None:
                 self._size -= len(v) + len(key)
 
+    def invalidate_many(self, keys) -> None:
+        """Batched invalidation under one lock acquisition (write pipeline:
+        one sweep per ``put_many``/``write_batch`` instead of a lock round
+        trip per key)."""
+        with self._lock:
+            for key in keys:
+                v = self._data.pop(key, None)
+                if v is not None:
+                    self._size -= len(v) + len(key)
+
     def clear(self) -> None:
         with self._lock:
             self._data.clear()

@@ -178,6 +178,67 @@ class TideDB:
             self.value_wal.flush()
         return pos
 
+    def _write_many(self, ks_id: int, records, keys, marker_of,
+                    app_bytes: int, opts: WriteOptions) -> list:
+        """The batched write pipeline, shared by ``put_many`` and
+        ``delete_many``: append (one allocation-lock acquisition, coalesced
+        pwrite runs) → apply (one row-lock acquisition per cell) → mark
+        processed (one tracker acquisition) → one cache invalidation sweep
+        → optional sync flush.  The ordering is correctness-critical and
+        mirrors the scalar write flow (§3.1 steps 1–4)."""
+        positions = self.value_wal.append_many(records, opts.epoch,
+                                               app_bytes=app_bytes)
+        self.table.apply_many(
+            [(ks_id, key, marker_of(pos))
+             for key, pos in zip(keys, positions)])
+        self.value_wal.mark_processed_many(
+            (pos, len(p)) for pos, (_, p) in zip(positions, records))
+        self.cache.invalidate_many(
+            [self._cache_key(ks_id, k) for k in keys])
+        if opts.durability == "sync":
+            self.value_wal.flush()
+        return positions
+
+    def put_many(self, items, keyspace=0, epoch: int = 0,
+                 opts: Optional[WriteOptions] = None) -> list:
+        """Batched ``put`` (§3.1 vectorized): ``items`` is a list of
+        (key, value) pairs.
+
+        One allocation-lock acquisition reserves WAL positions for the whole
+        batch; records land as coalesced per-segment ``pwrite`` runs; the
+        Large Table applies all markers with one row-lock acquisition per
+        touched cell; one cache sweep invalidates every key.  NOT atomic —
+        semantically identical to N ``put`` calls (each record replays
+        independently, so a crash can admit a prefix); use ``write_batch``
+        for all-or-nothing semantics.  Returns WAL positions aligned with
+        ``items``.
+        """
+        if not items:
+            return []
+        opts = self._wopts(opts, epoch)
+        ks_id = self._ks_id(keyspace)
+        records, app_bytes = [], 0
+        for key, value in items:
+            records.append((T_ENTRY, encode_entry(ks_id, key, value,
+                                                  opts.epoch)))
+            app_bytes += len(key) + len(value)
+        return self._write_many(ks_id, records, [k for k, _ in items],
+                                lambda pos: pos, app_bytes, opts)
+
+    def delete_many(self, keys, keyspace=0, epoch: int = 0,
+                    opts: Optional[WriteOptions] = None) -> list:
+        """Batched ``delete``; same pipeline and non-atomicity as
+        ``put_many``.  Returns WAL positions aligned with ``keys``."""
+        if not keys:
+            return []
+        opts = self._wopts(opts, epoch)
+        ks_id = self._ks_id(keyspace)
+        records = [(T_TOMBSTONE, encode_tombstone(ks_id, key, opts.epoch))
+                   for key in keys]
+        return self._write_many(ks_id, records, list(keys),
+                                lambda pos: TOMB_FLAG | pos,
+                                sum(len(k) for k in keys), opts)
+
     def write_batch(self, ops, epoch: int = 0,
                     opts: Optional[WriteOptions] = None) -> list:
         """Atomic batch (§3.1): one WAL allocation covers the whole batch.
@@ -209,10 +270,11 @@ class TideDB:
             return []
         batch_pos, sub_positions = self.value_wal.append_batch(
             subrecords, opts.epoch, app_bytes=app_bytes)
-        for (ks_id, key, is_del), pos in zip(metas, sub_positions):
-            marker = (TOMB_FLAG | pos) if is_del else pos
-            self.table.apply(ks_id, key, marker)
-            self.cache.invalidate(self._cache_key(ks_id, key))
+        self.table.apply_many(
+            [(ks_id, key, (TOMB_FLAG | pos) if is_del else pos)
+             for (ks_id, key, is_del), pos in zip(metas, sub_positions)])
+        self.cache.invalidate_many(
+            [self._cache_key(ks_id, key) for ks_id, key, _ in metas])
         body_len = sum(HEADER_SIZE + len(p) for _, p in subrecords)
         self.value_wal.mark_processed(batch_pos, body_len)
         if opts.durability == "sync":

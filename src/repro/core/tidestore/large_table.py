@@ -187,6 +187,60 @@ class LargeTable:
                 cell.state = CellState.DIRTY_UNLOADED   # buffer only (§4.1)
             return True
 
+    def apply_many(self, items) -> int:
+        """Batched ``apply`` (§3.1 vectorized index update): ``items`` is a
+        list of (ks_id, key, pos_marker) in WAL-position order.
+
+        Markers group per cell; each touched cell takes its row lock ONCE
+        for the whole group, new keys feed one vectorized ``bloom.add_many``
+        per cell, the state transition runs once per cell, and the global
+        mem-budget counter bumps once for the whole batch.  List order is
+        preserved inside each cell, so same-key markers resolve exactly as
+        sequential ``apply`` calls (higher WAL position wins).  Returns the
+        number of markers that changed the table.
+        """
+        groups: dict[tuple[int, object], tuple[Cell, list]] = {}
+        for ks_id, key, marker in items:
+            cell = self.ks(ks_id).cell_for_key(key)
+            ent = groups.get((ks_id, cell.cell_id))
+            if ent is None:
+                ent = groups[(ks_id, cell.cell_id)] = (cell, [])
+            ent[1].append((key, marker))
+        changed = 0
+        mem_delta = 0
+        for (ks_id, cid), (cell, kv) in groups.items():
+            ks = self.ks(ks_id)
+            with ks.row_lock(cid):
+                cell_changed = 0
+                bloom_keys = []
+                for key, marker in kv:
+                    cur = cell.mem.get(key)
+                    if cur is not None and real_pos(cur) >= real_pos(marker):
+                        continue
+                    if cur is None:
+                        mem_delta += 1
+                    cell.mem[key] = marker
+                    p = real_pos(marker)
+                    if cell.min_dirty_pos is None or p < cell.min_dirty_pos:
+                        cell.min_dirty_pos = p
+                    if not is_tombstone(marker):
+                        if cur is None:
+                            cell.approx_keys += 1
+                        if cell.bloom is not None:
+                            bloom_keys.append(key)
+                    cell_changed += 1
+                if cell_changed:
+                    if bloom_keys:
+                        cell.bloom.add_many(bloom_keys)
+                    if cell.state in (CellState.EMPTY, CellState.LOADED):
+                        cell.state = CellState.DIRTY_LOADED
+                    elif cell.state == CellState.UNLOADED:
+                        cell.state = CellState.DIRTY_UNLOADED
+                changed += cell_changed
+        if mem_delta:
+            self._bump_mem(mem_delta)
+        return changed
+
     def compare_and_set(self, ks_id: int, key: bytes, expect_pos: int,
                         new_marker: int) -> bool:
         """Relocation CAS (§4.4): update only if the key still points at

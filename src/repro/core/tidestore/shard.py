@@ -165,6 +165,46 @@ class ShardedTideDB:
         return self.shards[self.shard_of(key)].delete(key, keyspace, epoch,
                                                       opts=opts)
 
+    def _fanout_writes(self, method: str, items: list, key_of,
+                       keyspace, epoch, opts) -> list:
+        """Shared scatter/gather for the batched write entry points: group
+        item indices per shard, single-shard fast path, pool fan-out,
+        aligned merge of per-shard positions."""
+        if not items:
+            return []
+        groups = self._group_indices([key_of(it) for it in items])
+        if len(groups) == 1:
+            ((sid, _),) = groups.items()
+            return getattr(self.shards[sid], method)(items, keyspace, epoch,
+                                                     opts=opts)
+
+        def work(sid, idx):
+            return getattr(self.shards[sid], method)(
+                [items[j] for j in idx], keyspace, epoch, opts=opts)
+
+        futures = {sid: self._pool.submit(work, sid, idx)
+                   for sid, idx in groups.items()}
+        positions: list = [None] * len(items)
+        for sid, idx in groups.items():
+            for j, pos in zip(idx, futures[sid].result()):
+                positions[j] = pos
+        return positions
+
+    def put_many(self, items, keyspace=0, epoch: int = 0,
+                 opts: Optional[WriteOptions] = None) -> list:
+        """Batched put fanned out per shard: one ``append_many`` (one
+        allocation-lock acquisition, coalesced pwrite runs) per shard with
+        the work submitted to the pool.  Positions are per-shard offsets
+        aligned with ``items``; like ``TideDB.put_many`` this is NOT atomic."""
+        return self._fanout_writes("put_many", list(items),
+                                   lambda it: it[0], keyspace, epoch, opts)
+
+    def delete_many(self, keys, keyspace=0, epoch: int = 0,
+                    opts: Optional[WriteOptions] = None) -> list:
+        """Batched delete fanned out per shard (see ``put_many``)."""
+        return self._fanout_writes("delete_many", list(keys),
+                                   lambda k: k, keyspace, epoch, opts)
+
     def write_batch(self, ops, epoch: int = 0,
                     opts: Optional[WriteOptions] = None) -> list:
         """Split ops per shard; one atomic ``append_batch`` per shard.

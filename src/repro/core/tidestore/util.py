@@ -39,6 +39,30 @@ class PositionTracker:
                     self._watermark = e
             return self._watermark
 
+    def mark_many(self, ranges) -> int:
+        """Mark many [start, end) ranges under one lock acquisition.
+
+        Adjacent ranges are merged before they reach the heap, so a batched
+        append of N contiguous records costs O(runs) heap pushes, not O(N).
+        """
+        with self._lock:
+            run_s = run_e = None
+            for s, e in ranges:
+                if run_s is None:
+                    run_s, run_e = s, e
+                elif s == run_e:
+                    run_e = e
+                else:
+                    heapq.heappush(self._heap, (run_s, run_e))
+                    run_s, run_e = s, e
+            if run_s is not None:
+                heapq.heappush(self._heap, (run_s, run_e))
+            while self._heap and self._heap[0][0] <= self._watermark:
+                s, e = heapq.heappop(self._heap)
+                if e > self._watermark:
+                    self._watermark = e
+            return self._watermark
+
     @property
     def last_processed(self) -> int:
         with self._lock:
@@ -62,10 +86,12 @@ class Metrics:
     index_flushes: int = 0
     index_lookups: int = 0
     index_lookup_iterations: int = 0
+    batched_append_runs: int = 0       # coalesced pwrite runs (append_many)
     batched_blob_reads: int = 0        # whole-cell index reads (multi_get)
     batched_kernel_lookups: int = 0    # queries resolved via Pallas kernel
     batched_read_keys: int = 0         # keys entering multi_get/multi_exists
     batched_read_runs: int = 0         # coalesced WAL pread runs issued
+    batched_write_records: int = 0     # records entering append_many
     blob_cache_hits: int = 0           # memoized parsed-blob reuses
     bloom_negative: int = 0
     cache_hits: int = 0

@@ -14,10 +14,11 @@ retirement is an epoch event: all the sequence's blocks expire at once.
 ``ShardedTideDB``).  Queued get/exists/put/delete requests keep one queue
 discipline: each step drains a batch and serves it as maximal same-kind
 runs in arrival order — reads collapse into ``multi_get``/``multi_exists``
-calls (§3.2's 1.7×/15.6× wins at serving scale), writes collapse into one
-``write_batch`` (one WAL allocation; one per-shard ``append_batch`` when
-the engine is sharded).  Run boundaries preserve scalar semantics: a read
-submitted after a write to the same key always observes it.
+calls (§3.2's 1.7×/15.6× wins at serving scale), writes collapse into
+batched ``put_many``/``delete_many`` calls (one WAL allocation-lock
+acquisition, coalesced pwrite runs; per-shard fan-out when the engine is
+sharded).  Run boundaries preserve scalar semantics: a read submitted
+after a write to the same key always observes it.
 """
 from __future__ import annotations
 
@@ -89,8 +90,11 @@ class KvBatchServer:
     ``submit_delete``; each ``step`` drains up to ``max_batch`` queued
     requests and serves them as maximal same-kind *runs* in arrival order:
     a read run becomes one ``multi_get``/``multi_exists`` per (op,
-    keyspace) group, a write run becomes ONE ``write_batch`` — the storage
-    analogue of the decode engine's slot batching.  Run boundaries keep
+    keyspace) group, a write run retires through the vectorized write
+    pipeline — one ``put_many``/``delete_many`` per (op, keyspace) group,
+    falling back to one atomic ``write_batch`` when a key sees both ops in
+    the same stage — the storage analogue of the decode engine's slot
+    batching.  Run boundaries keep
     scalar semantics: reads never jump over an earlier write to the same
     key (and batched results are identical to scalar execution).
     Single-threaded step loop by design; submission is thread-safe.
@@ -104,6 +108,11 @@ class KvBatchServer:
         self.batches_served = 0
         self.keys_served = 0
         self.writes_served = 0
+        # Write-path counters: per-retired-stage records/bytes, so the
+        # serving benchmark can report write amplification next to req/s
+        # (engine-side disk bytes come from db.stats()).
+        self.write_stages = 0
+        self.write_bytes = 0
 
     def _submit(self, req):
         # Validate the keyspace here so a bad spelling raises to the
@@ -197,20 +206,56 @@ class KvBatchServer:
         return len(reqs)
 
     def _serve_writes(self, reqs: list) -> int:
-        # The whole run is ONE write_batch (one WAL allocation; the sharded
-        # engine further splits it into one append_batch per shard).
-        wb = WriteBatch()
-        for r in reqs:
-            if r.op == "put":
-                wb.put(r.key, r.value, keyspace=r.keyspace)
-            else:
-                wb.delete(r.key, keyspace=r.keyspace)
-        positions = self.db.write_batch(wb)
+        # A same-kind stage retires through the vectorized write pipeline:
+        # one ``put_many``/``delete_many`` per (op, keyspace) group — one
+        # WAL allocation-lock acquisition + coalesced pwrite runs instead
+        # of N appends.  If the same (keyspace, key) appears under BOTH ops
+        # in this stage (the scheduler allows write/write same-key in one
+        # stage), splitting by op would reorder them, so the whole stage
+        # falls back to one atomic ``write_batch`` in submission order.
+        # Engines without the batched entry points take the same fallback.
+        norm = getattr(self.db, "_ks_id", lambda ks: ks)
+        put_many = getattr(self.db, "put_many", None)
+        delete_many = getattr(self.db, "delete_many", None)
+        put_keys = {(norm(r.keyspace), r.key) for r in reqs if r.op == "put"}
+        del_keys = {(norm(r.keyspace), r.key) for r in reqs
+                    if r.op != "put"}
+        if put_many is None or delete_many is None or (put_keys & del_keys):
+            wb = WriteBatch()
+            for r in reqs:
+                if r.op == "put":
+                    wb.put(r.key, r.value, keyspace=r.keyspace)
+                else:
+                    wb.delete(r.key, keyspace=r.keyspace)
+            positions = self.db.write_batch(wb)
+            for r, pos in zip(reqs, positions):
+                r.pos = pos
+        else:
+            # Group on the NORMALIZED keyspace: aliased spellings (0 vs
+            # "default") must land in one group, or same-key writes split
+            # across groups and the later group's higher WAL position
+            # would invert submission order.
+            groups: dict[tuple, list[KvWrite]] = {}
+            for r in reqs:
+                groups.setdefault((r.op, norm(r.keyspace)), []).append(r)
+            for (op, ks), group in groups.items():
+                if op == "put":
+                    positions = put_many([(r.key, r.value) for r in group],
+                                         keyspace=ks)
+                else:
+                    positions = delete_many([r.key for r in group],
+                                            keyspace=ks)
+                for r, pos in zip(group, positions):
+                    r.pos = pos
         now = time.time()
-        for r, pos in zip(reqs, positions):
-            r.pos, r.done, r.t_done = pos, True, now
+        for r in reqs:
+            r.done, r.t_done = True, now
         self.batches_served += 1
         self.writes_served += len(reqs)
+        self.write_stages += 1
+        self.write_bytes += sum(
+            len(r.key) + (len(r.value) if r.value is not None else 0)
+            for r in reqs)
         return len(reqs)
 
     def run_until_drained(self, max_steps: int = 100_000) -> int:
@@ -228,6 +273,11 @@ class KvBatchServer:
         return {"batches_served": self.batches_served,
                 "keys_served": self.keys_served,
                 "writes_served": self.writes_served,
+                "write_stages": self.write_stages,
+                "write_bytes": self.write_bytes,
+                "mean_write_stage_records": (self.writes_served
+                                             / self.write_stages
+                                             if self.write_stages else 0.0),
                 "mean_batch": ((self.keys_served + self.writes_served)
                                / self.batches_served
                                if self.batches_served else 0.0),
