@@ -15,18 +15,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: kv,kvbatch,kvshard,kvwrite,"
-                         "reloc,index,recovery,validator,kernels,roofline")
+                         "kvexists,reloc,index,recovery,validator,kernels,"
+                         "roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (index_formats, kernel_bench, kv_throughput, kv_write,
-                   recovery, relocation, roofline_report, validator_sim)
+    from . import (index_formats, kernel_bench, kv_exists, kv_throughput,
+                   kv_write, recovery, relocation, roofline_report,
+                   validator_sim)
 
     suites = [
         ("kv", kv_throughput.run),          # Figures 1, 6, 7, 8
         ("kvbatch", kv_throughput.run_batched),  # batched read pipeline
         ("kvshard", kv_throughput.run_sharded),  # shard-parallel multi_get
         ("kvwrite", kv_write.run),          # vectorized write pipeline
+        ("kvexists", kv_exists.run),        # fused existence-path probes
         ("reloc", relocation.run),          # Figure 9
         ("index", index_formats.run),       # Figure 10 / §6.3
         ("recovery", recovery.run),         # §3.3–3.4

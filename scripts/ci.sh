@@ -22,3 +22,8 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # bar is >=5x, checked by `python -m benchmarks.run --only kvwrite`), far
 # enough below it that loaded CI runners can't flake it.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kv_write --smoke
+
+# Existence-path smoke: one fused ragged Bloom probe must not lose to the
+# per-cell dispatch path (real bar: >=2x at batch>=256 on >=16 cells,
+# checked by `python -m benchmarks.run --only kvexists`).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kv_exists --smoke

@@ -8,6 +8,12 @@ flat uint32 word array with k double-hashed probes — **bit-identical** to the
 a batch of queries can be tested either host-side (numpy) or through the
 kernel's ops wrapper with exactly the same answers — no false negatives can
 be introduced by switching paths.
+
+``probe_cells`` is the fused multi-cell entry: the bit arrays of every
+touched cell pack into one buffer, each query carries its cell's word
+offset and modulus, and the whole ragged (key, cell) batch resolves in ONE
+``bloom_check`` dispatch (or one vectorized numpy pass below the dispatch
+threshold) instead of one dispatch per cell.
 """
 from __future__ import annotations
 
@@ -74,34 +80,108 @@ class BloomFilter:
                          np.uint32(1) << (idx & np.uint32(31)))
 
     def might_contain(self, key: bytes) -> bool:
+        # Scalar fast path: the documented probe arithmetic in plain ints
+        # (idx_i = (h1 + i·h2) mod 2³² mod nbits, word = idx>>5,
+        # bit = idx&31) with early exit on the first clear bit — this runs
+        # under row locks, where the numpy small-array overhead of the
+        # batched twins is pure latency.  Bit-identical to ``probe_cells``
+        # by construction; the parity tier pins it.
         h1, h2 = key_hashes(key)
-        idx = self._probe_idx(np.uint32([h1]), np.uint32([h2]))
-        words = self.bits[(idx >> np.uint32(5)).astype(np.int64)]
-        return bool(np.all((words >> (idx & np.uint32(31))) & np.uint32(1)))
+        bits, nbits = self.bits, self.nbits
+        for i in range(self.k):
+            idx = ((h1 + i * h2) & 0xFFFFFFFF) % nbits
+            if not (int(bits[idx >> 5]) >> (idx & 31)) & 1:
+                return False
+        return True
 
     def might_contain_many(self, keys, h1: np.ndarray | None = None,
                            h2: np.ndarray | None = None,
                            use_kernel: bool = True) -> np.ndarray:
         """Vectorized membership for a batch of keys → (Q,) bool.
 
-        Large batches route through the ``bloom_check`` kernel ops wrapper
-        (one gather + bit-test per probe, no per-query control flow); small
-        batches take the equivalent numpy path to skip jit dispatch.
-        Precomputed (h1, h2) arrays may be passed to amortize hashing across
-        the cells of one multi-key read.
+        A single-cell view of ``probe_cells``: large batches route through
+        the fused ragged kernel wrapper (one gather + bit-test per probe, no
+        per-query control flow); small batches take the equivalent numpy
+        path to skip jit dispatch.  Precomputed (h1, h2) arrays may be
+        passed to amortize hashing across the cells of one multi-key read.
         """
         if h1 is None or h2 is None:
             if not len(keys):
                 return np.zeros(0, dtype=bool)
             h1, h2 = key_hashes_many(keys)
-        if use_kernel and len(h1) >= _KERNEL_MIN_BATCH:
-            from repro.kernels.bloom_check.ops import might_contain_batch
-            return might_contain_batch(h1, h2, self.bits, k=self.k,
-                                       nbits=self.nbits)
-        idx = self._probe_idx(h1, h2)
-        words = self.bits[(idx >> np.uint32(5)).astype(np.int64)]
-        return np.all((words >> (idx & np.uint32(31))) & np.uint32(1), axis=0)
+        return probe_cells([self], h1, h2, [np.arange(len(h1))],
+                           use_kernel=use_kernel)
 
     @property
     def nbytes(self) -> int:
         return self.bits.nbytes
+
+
+def _probe_host(h1: np.ndarray, h2: np.ndarray, off: np.ndarray,
+                nbits: np.ndarray, bits: np.ndarray, k: int) -> np.ndarray:
+    """Numpy twin of the ragged kernel: per-query modulus + word base."""
+    i = np.arange(k, dtype=np.uint32)[:, None]
+    idx = (h1[None, :] + i * h2[None, :]) % nbits[None, :]
+    words = bits[off[None, :].astype(np.int64)
+                 + (idx >> np.uint32(5)).astype(np.int64)]
+    return np.all((words >> (idx & np.uint32(31))) & np.uint32(1), axis=0)
+
+
+def probe_cells(cells, h1: np.ndarray, h2: np.ndarray, groups,
+                use_kernel: bool = True) -> np.ndarray:
+    """Fused membership across many cells' filters → (Q,) bool.
+
+    ``cells[i]`` is a ``BloomFilter`` (or ``None`` to skip) and
+    ``groups[i]`` the indices into ``h1``/``h2`` of the queries probing it —
+    ragged group shapes welcome, each query index in at most one group.
+    Every (query, cell) pair resolves in ONE kernel dispatch: the touched
+    bitsets pack back to back, each query carries its cell's word offset
+    and true modulus.  Below ``_KERNEL_MIN_BATCH`` total queries (or with
+    ``use_kernel=False``) the identical answer comes from one vectorized
+    numpy pass — still fused, never per-cell.  Unassigned queries come back
+    ``False``.  Bit-for-bit equal to ``cells[i].might_contain(key)`` per
+    query: the probe arithmetic never changes, only the batching.
+
+    Kernel routing: one fused dispatch costs about what ONE per-cell
+    dispatch did, so the kernel engages once every touched cell carries at
+    least the single-cell threshold of queries on average (``total ≥
+    _KERNEL_MIN_BATCH × n_cells`` — the point where the pre-fusion path
+    started paying one dispatch *per cell*).  With one cell this reduces
+    exactly to the existing small-batch threshold.
+
+    Cells with distinct ``k`` fuse per k-group (one dispatch each); every
+    engine-built filter shares one k, so the batch path stays one dispatch.
+    """
+    h1 = np.asarray(h1, dtype=np.uint32)
+    h2 = np.asarray(h2, dtype=np.uint32)
+    out = np.zeros(len(h1), dtype=bool)
+    if not len(h1):
+        return out
+    by_k: dict[int, list] = {}
+    for cell, g in zip(cells, groups):
+        g = np.asarray(g, dtype=np.int64)
+        if cell is None or g.size == 0:
+            continue
+        by_k.setdefault(cell.k, []).append((cell, g))
+    for k, members in by_k.items():
+        if len(members) == 1:                # no packing copy for one cell
+            cell, sel = members[0]
+            bits = cell.bits
+            off = np.zeros(sel.size, np.int32)
+            nb = np.full(sel.size, cell.nbits, np.uint32)
+        else:
+            sizes = [c.bits.shape[0] for c, _ in members]
+            bases = np.concatenate([[0], np.cumsum(sizes[:-1])])
+            bits = np.concatenate([c.bits for c, _ in members])
+            sel = np.concatenate([g for _, g in members])
+            off = np.concatenate(
+                [np.full(g.size, bases[i], np.int32)
+                 for i, (_, g) in enumerate(members)])
+            nb = np.concatenate([np.full(g.size, c.nbits, np.uint32)
+                                 for c, g in members])
+        if use_kernel and sel.size >= _KERNEL_MIN_BATCH * len(members):
+            from repro.kernels.bloom_check.ops import probe_cells_batch
+            out[sel] = probe_cells_batch(h1[sel], h2[sel], off, nb, bits, k=k)
+        else:
+            out[sel] = _probe_host(h1[sel], h2[sel], off, nb, bits, k)
+    return out

@@ -179,7 +179,8 @@ class TideDB:
         return pos
 
     def _write_many(self, ks_id: int, records, keys, marker_of,
-                    app_bytes: int, opts: WriteOptions) -> list:
+                    app_bytes: int, opts: WriteOptions,
+                    epochs=None) -> list:
         """The batched write pipeline, shared by ``put_many`` and
         ``delete_many``: append (one allocation-lock acquisition, coalesced
         pwrite runs) → apply (one row-lock acquisition per cell) → mark
@@ -187,7 +188,8 @@ class TideDB:
         → optional sync flush.  The ordering is correctness-critical and
         mirrors the scalar write flow (§3.1 steps 1–4)."""
         positions = self.value_wal.append_many(records, opts.epoch,
-                                               app_bytes=app_bytes)
+                                               app_bytes=app_bytes,
+                                               epochs=epochs)
         self.table.apply_many(
             [(ks_id, key, marker_of(pos))
              for key, pos in zip(keys, positions)])
@@ -202,7 +204,11 @@ class TideDB:
     def put_many(self, items, keyspace=0, epoch: int = 0,
                  opts: Optional[WriteOptions] = None) -> list:
         """Batched ``put`` (§3.1 vectorized): ``items`` is a list of
-        (key, value) pairs.
+        (key, value) pairs — or (key, value, epoch) triples to tag records
+        individually (a triple overrides the batch-level epoch; per-record
+        epochs tag only the segment each record lands in, exactly as N
+        scalar puts would, so mixed-epoch batches never widen a segment's
+        pruning range).
 
         One allocation-lock acquisition reserves WAL positions for the whole
         batch; records land as coalesced per-segment ``pwrite`` runs; the
@@ -213,29 +219,36 @@ class TideDB:
         for all-or-nothing semantics.  Returns WAL positions aligned with
         ``items``.
         """
+        items = list(items)       # may be a one-shot iterable; read twice
         if not items:
             return []
         opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
         records, app_bytes = [], 0
-        for key, value in items:
-            records.append((T_ENTRY, encode_entry(ks_id, key, value,
-                                                  opts.epoch)))
+        epochs, mixed = [], False
+        for item in items:
+            key, value = item[0], item[1]
+            e = item[2] if len(item) > 2 else opts.epoch
+            mixed = mixed or e != opts.epoch
+            epochs.append(e)
+            records.append((T_ENTRY, encode_entry(ks_id, key, value, e)))
             app_bytes += len(key) + len(value)
-        return self._write_many(ks_id, records, [k for k, _ in items],
-                                lambda pos: pos, app_bytes, opts)
+        return self._write_many(ks_id, records, [it[0] for it in items],
+                                lambda pos: pos, app_bytes, opts,
+                                epochs=epochs if mixed else None)
 
     def delete_many(self, keys, keyspace=0, epoch: int = 0,
                     opts: Optional[WriteOptions] = None) -> list:
         """Batched ``delete``; same pipeline and non-atomicity as
         ``put_many``.  Returns WAL positions aligned with ``keys``."""
+        keys = list(keys)         # may be a one-shot iterable; read twice
         if not keys:
             return []
         opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
         records = [(T_TOMBSTONE, encode_tombstone(ks_id, key, opts.epoch))
                    for key in keys]
-        return self._write_many(ks_id, records, list(keys),
+        return self._write_many(ks_id, records, keys,
                                 lambda pos: TOMB_FLAG | pos,
                                 sum(len(k) for k in keys), opts)
 
@@ -409,10 +422,13 @@ class TideDB:
     def multi_exists(self, keys, keyspace=0,
                      opts: Optional[ReadOptions] = None) -> list:
         """Batched existence checks resolved entirely from index state —
-        the 15.6× op (§3.2), vectorized: one cache sweep, then per-cell
-        Bloom passes over precomputed hashes and one batched Large Table
-        resolution.  Never touches the Value WAL.  Equivalent to
-        ``[db.exists(k) for k in keys]``."""
+        the 15.6× op (§3.2), vectorized: one cache sweep, then ONE fused
+        ragged Bloom probe over precomputed hashes — a single
+        ``bloom_check`` kernel dispatch per store however many cells the
+        batch touches (``ReadOptions.use_kernel`` routes it; batches below
+        the dispatch threshold take the identical fused numpy pass) — and
+        one batched Large Table resolution.  Never touches the Value WAL.
+        Equivalent to ``[db.exists(k) for k in keys]``."""
         if not keys:
             return []
         opts = opts or ReadOptions()

@@ -302,7 +302,10 @@ class LargeTable:
 
     def exists(self, ks_id: int, key: bytes, min_live_pos: int = 0) -> bool:
         """Existence check resolved entirely from index state (§3.2) —
-        never touches the Value WAL.  This is the 15.6× operation."""
+        never touches the Value WAL.  This is the 15.6× operation.  The
+        Bloom gate routes through the same ``probe_cells`` arithmetic as
+        the fused batch path (single-query numpy fast path), so scalar and
+        batched answers can never diverge."""
         ks = self.ks(ks_id)
         cell = ks.cell_for_key(key, create=False)
         if cell is None:
@@ -317,22 +320,61 @@ class LargeTable:
         return real_pos(marker) >= min_live_pos
 
     # -------------------------------------------------------- batched reads
+    def _fused_bloom_pass(self, ks: Keyspace, probe, out, use_kernel) -> list:
+        """ONE ragged Bloom probe across every (cell, keys, bloom) group in
+        ``probe``: keys hash once, the touched cells' bitsets pack into one
+        ``probe_cells`` call — a single kernel dispatch per store per batch
+        however many cells the batch touches, where the pre-fusion path
+        paid one ``bloom_check`` dispatch per cell.  Negatives are recorded
+        as absent in ``out``; returns the surviving (cell, keys) groups.
+
+        Runs OUTSIDE the row locks (the kernel's jit dispatch — and a
+        first-shape compile — must not stall writers sharing a row lock;
+        the bits arrays only ever gain bits, so a concurrent add cannot
+        produce a false negative for keys already present).  The bloom
+        references were snapshotted under each cell's row lock.
+        """
+        from .bloom import key_hashes_many, probe_cells
+        flat = [k for _, keys, _ in probe for k in keys]
+        if not flat:
+            return []
+        h1, h2 = key_hashes_many(flat)
+        groups, base = [], 0
+        for _, keys, _ in probe:
+            groups.append(np.arange(base, base + len(keys)))
+            base += len(keys)
+        ok = probe_cells([bloom for _, _, bloom in probe], h1, h2, groups,
+                         use_kernel=use_kernel)
+        self.metrics.add(fused_bloom_probes=1,
+                         bloom_negative=int(len(flat) - ok.sum()))
+        survivors = []
+        for (cell, keys, _), g in zip(probe, groups):
+            hits = ok[g]
+            for k, hit in zip(keys, hits):
+                if not hit:
+                    out[k] = None
+            kept = [k for k, hit in zip(keys, hits) if hit]
+            if kept:
+                survivors.append((cell, kept))
+        return survivors
+
     def get_positions_batch(self, ks_id: int, keys, *, use_bloom: bool = True,
                             use_kernel: bool = True) -> list:
         """Batched key → position-marker resolution (§3.2 batched).
 
-        Per cell (in cell-id order): check the in-memory buffer under the row
-        lock, then resolve disk-resident cells either by whole-blob batched
-        resolution — the parsed blob comes from the memo cache or one pread,
-        feeding one ``optimistic_lookup`` kernel call across *all* such
-        cells (their concatenated u32 key prefixes stay globally sorted,
-        §4.2) — or, when a cell is large relative to its query count, or
-        keys are variable-width/prefix-distributed, by the per-key windowed
-        path behind a Bloom short-circuit.  Cells whose parsed blob is
-        already memoized skip the Bloom pass: their resolution is exact and
-        in-memory, so the filter could only add hashing work.  Returns raw
-        markers aligned with ``keys`` (tombstone bits preserved; ``None`` =
-        absent).
+        Per cell (in cell-id order): check the in-memory buffer under the
+        row lock, then run ONE fused Bloom probe across every disk-resident
+        cell the batch touches (``_fused_bloom_pass``), and resolve the
+        survivors either by whole-blob batched resolution — the parsed blob
+        comes from the memo cache or one pread, feeding one
+        ``optimistic_lookup`` kernel call across *all* such cells (their
+        concatenated u32 key prefixes stay globally sorted, §4.2) — or,
+        when a cell is large relative to its query count, or keys are
+        variable-width/prefix-distributed, by the per-key windowed path.
+        Cells whose parsed blob is already memoized skip the Bloom pass:
+        their resolution is exact and in-memory, so the filter could only
+        add hashing work.  Returns raw markers aligned with ``keys``
+        (tombstone bits preserved; ``None`` = absent).
         """
         if not keys:
             return []
@@ -340,17 +382,15 @@ class LargeTable:
         out: dict[bytes, Optional[int]] = {}
         uniq = list(dict.fromkeys(keys))
         if ks.cfg.distribution != "uniform":
-            self._perkey_resolve(ks, [(ks.cell_for_key(k, create=False), k)
-                                      for k in uniq], out, use_bloom)
+            self._prefix_resolve(ks, uniq, out, use_bloom, use_kernel)
             return [out[k] for k in keys]
 
         by_cell: dict = {}
         for k in uniq:
             by_cell.setdefault(ks.cell_id_for_key(k), []).append(k)
 
-        blob_cells = []     # (cell, missing_keys, disk_pos, disk_len, count)
-        perkey = []         # (cell, key) fallback work
-        esz = entry_size(ks.cfg.key_len)
+        pend = []           # (cell, missing|None, snap, memoized, fmt_ok)
+        probe = []          # (cell, keys, bloom) → one fused Bloom pass
         for cid in sorted(by_cell):
             cell = ks.cells.get(cid)
             qs = by_cell[cid]
@@ -378,21 +418,24 @@ class LargeTable:
             blob_fmt_ok = ks.cfg.index_format in ("optimistic", "header")
             memoized = blob_fmt_ok and snap[0] in self.blob_cache
             if not memoized and use_bloom and bloom is not None:
-                # Bloom pass, outside the row lock (the kernel's jit
-                # dispatch — and a first-shape compile — must not stall
-                # writers sharing this row lock; the bits array only ever
-                # gains bits, so a concurrent add cannot produce a false
-                # negative for keys already present).  Cells whose parsed
-                # blob is memoized skip it: their exact resolution is
-                # already in memory, so the filter could only add hashing
-                # work — but for a cold cell it spares an all-absent batch
-                # the whole-blob read entirely.
-                ok = bloom.might_contain_many(missing, use_kernel=use_kernel)
-                self.metrics.add(bloom_negative=int((~ok).sum()))
-                for k, hit in zip(missing, ok):
-                    if not hit:
-                        out[k] = None
-                missing = [k for k, hit in zip(missing, ok) if hit]
+                # Queued for the fused probe; a memoized cell skips it (its
+                # exact resolution is already in memory, so the filter
+                # could only add hashing work — but for a cold cell a
+                # negative spares an all-absent batch the whole-blob read).
+                probe.append((cell, missing, bloom))
+                pend.append((cell, None, snap, memoized, blob_fmt_ok))
+            else:
+                pend.append((cell, missing, snap, memoized, blob_fmt_ok))
+        surv = ({cell.cell_id: kept for cell, kept in
+                 self._fused_bloom_pass(ks, probe, out, use_kernel)}
+                if probe else {})
+
+        blob_cells = []     # (cell, missing_keys, disk_pos, disk_len, count)
+        perkey = []         # (cell, key) fallback work
+        esz = entry_size(ks.cfg.key_len)
+        for cell, missing, snap, memoized, blob_fmt_ok in pend:
+            if missing is None:
+                missing = surv.get(cell.cell_id)
                 if not missing:
                     continue
             # Cost model: one whole-blob read beats len(missing) windowed
@@ -410,6 +453,41 @@ class LargeTable:
         if perkey:
             self._perkey_resolve(ks, perkey, out, use_bloom=False)
         return [out[k] for k in keys]
+
+    def _prefix_resolve(self, ks: Keyspace, uniq, out, use_bloom,
+                        use_kernel) -> None:
+        """Prefix-keyspace batched resolution: the windowed per-key path,
+        but behind the same single fused Bloom probe as the uniform path.
+        Only keys that would actually go to disk (cell unloaded, key not in
+        the dirty buffer at snapshot time) are gated by the filter — keys
+        resident in memory resolve regardless, so tombstone markers keep
+        their bits."""
+        probe = []          # (cell, keys, bloom)
+        work = []           # (cell, key) per-key lookups
+        by_cell: dict = {}
+        for k in uniq:
+            cell = ks.cell_for_key(k, create=False)
+            if cell is None:
+                out[k] = None
+                continue
+            by_cell.setdefault(cell.cell_id, (cell, []))[1].append(k)
+        for cell, qs in by_cell.values():
+            gated, bloom = [], None
+            if use_bloom:
+                with ks.row_lock(cell.cell_id):
+                    if cell.has_disk() and cell.state in (
+                            CellState.UNLOADED, CellState.DIRTY_UNLOADED):
+                        bloom = cell.bloom
+                    if bloom is not None:
+                        gated = [k for k in qs if cell.mem.get(k) is None]
+            if gated:
+                probe.append((cell, gated, bloom))
+                gset = set(gated)
+                qs = [k for k in qs if k not in gset]
+            work.extend((cell, k) for k in qs)
+        for cell, kept in self._fused_bloom_pass(ks, probe, out, use_kernel):
+            work.extend((cell, k) for k in kept)
+        self._perkey_resolve(ks, work, out, use_bloom=False)
 
     def _blob_resolve(self, ks: Keyspace, blob_cells, out, use_kernel,
                       perkey) -> None:
@@ -500,7 +578,10 @@ class LargeTable:
             out[k] = marker
 
     def _perkey_resolve(self, ks: Keyspace, work, out, use_bloom) -> None:
-        """Existing per-key path: row lock + (bloom +) point lookup."""
+        """Per-key path: row lock + (bloom +) point lookup.  The batch
+        entry points pass ``use_bloom=False`` — their filtering already
+        happened in the fused pass; the scalar bloom branch remains for
+        direct callers."""
         for cell, key in work:
             if cell is None:
                 out[key] = None

@@ -111,6 +111,11 @@ class ShardedTideDB:
 
     def multi_exists(self, keys, keyspace=0,
                      opts: Optional[ReadOptions] = None) -> list:
+        """Batched existence fan-out: each shard's sub-batch coalesces its
+        cross-cell Bloom probes into ONE fused ``probe_cells`` call — one
+        probe per shard per batch, not one per touched cell (the kernel
+        routes per ``ReadOptions.use_kernel``; the multi-shard default is
+        the identical fused numpy pass, see ``_multi``)."""
         return self._multi(keys, keyspace, opts, "multi_exists", False)
 
     def _multi(self, keys, keyspace, opts, method: str, default) -> list:

@@ -94,6 +94,7 @@ class Metrics:
     batched_write_records: int = 0     # records entering append_many
     blob_cache_hits: int = 0           # memoized parsed-blob reuses
     bloom_negative: int = 0
+    fused_bloom_probes: int = 0        # fused ragged probes (1 per batch)
     cache_hits: int = 0
     cache_misses: int = 0
     relocated_entries: int = 0

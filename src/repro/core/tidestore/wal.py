@@ -226,7 +226,8 @@ class Wal:
         return pos
 
     def append_many(self, records: list[tuple[int, bytes]], epoch: int = 0,
-                    app_bytes: Optional[int] = None) -> list[int]:
+                    app_bytes: Optional[int] = None,
+                    epochs: Optional[list[int]] = None) -> list[int]:
         """Append N independent records with ONE allocation-lock acquisition
         (§3.1 vectorized: atomic allocation, batched parallel copy).
 
@@ -249,11 +250,22 @@ class Wal:
         independently, exactly as if appended by N ``append`` calls, and a
         torn tail drops only the suffix of the final run.  Returns the
         per-record WAL positions aligned with ``records``.
+
+        ``epochs`` optionally carries one epoch per record (aligned with
+        ``records``); without it every record takes ``epoch``.  Segment
+        epoch ranges are noted per record on the segment the record
+        actually lands in — identical to N scalar appends — so one batch
+        spanning segments (or carrying mixed epochs) can never widen a
+        segment's pruning range beyond the records it holds.
         """
         if not records:
             return []
+        if epochs is not None and len(epochs) != len(records):
+            raise ValueError("epochs must align 1:1 with records")
         seg_size = self.cfg.segment_size
-        note_epoch = bool(epoch)
+        eps = (np.asarray(list(epochs), dtype=np.int64) if epochs is not None
+               else np.full(len(records), epoch, dtype=np.int64))
+        note = np.zeros(len(records), dtype=bool)
         hdrs: list[bytes] = []
         lens = np.empty(len(records), dtype=np.int64)
         for i, (rtype, payload) in enumerate(records):
@@ -262,7 +274,7 @@ class Wal:
                 raise ValueError(f"record of {rec_len} B exceeds segment size")
             hdrs.append(_HDR.pack(rtype, len(payload), crc32(payload)))
             lens[i] = rec_len
-            note_epoch = note_epoch or rtype in (T_ENTRY, T_TOMBSTONE, T_BATCH)
+            note[i] = bool(eps[i]) or rtype in (T_ENTRY, T_TOMBSTONE, T_BATCH)
         cum = np.empty(len(records) + 1, dtype=np.int64)
         cum[0] = 0
         np.cumsum(lens, out=cum[1:])
@@ -305,10 +317,13 @@ class Wal:
                 runs += 1
                 self._tail += int(cum[j] - cum[i])
                 i = j
-            segs = np.unique(positions // seg_size)
-            if note_epoch:
-                for s in segs:
-                    self._note_epoch(int(s), epoch)
+            rec_segs = positions // seg_size
+            segs = np.unique(rec_segs)
+            for s in segs:
+                m = note & (rec_segs == s)
+                if m.any():
+                    e = eps[m]
+                    self._note_epoch_range(int(s), int(e.min()), int(e.max()))
             with self._dirty_lock:
                 self._dirty_segments.update(int(s) for s in segs)
         self.metrics.add(bytes_written_disk=total, wal_appends=len(records),
@@ -351,12 +366,15 @@ class Wal:
         return pos
 
     def _note_epoch(self, seg: int, epoch: int) -> None:
+        self._note_epoch_range(seg, epoch, epoch)
+
+    def _note_epoch_range(self, seg: int, lo: int, hi: int) -> None:
         with self._epoch_lock:
             cur = self._segment_epochs.get(seg)
             if cur is None:
-                self._segment_epochs[seg] = (epoch, epoch)
+                self._segment_epochs[seg] = (lo, hi)
             else:
-                self._segment_epochs[seg] = (min(cur[0], epoch), max(cur[1], epoch))
+                self._segment_epochs[seg] = (min(cur[0], lo), max(cur[1], hi))
 
     def mark_processed(self, pos: int, payload_len: int) -> int:
         return self.tracker.mark(pos, pos + HEADER_SIZE + payload_len)

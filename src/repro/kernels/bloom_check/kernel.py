@@ -47,3 +47,44 @@ def bloom_check(h1: jax.Array, h2: jax.Array, bits: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct(h1.shape, jnp.bool_),
         interpret=interpret,
     )(h1, h2, bits)
+
+
+def _ragged_kernel(h1_ref, h2_ref, off_ref, nbits_ref, bits_ref, out_ref,
+                   *, k: int):
+    h1 = h1_ref[...]
+    h2 = h2_ref[...]
+    off = off_ref[...]                                     # (Q,) i32 word base
+    nb = nbits_ref[...]                                    # (Q,) u32 modulus
+    bits = bits_ref[...]                                   # (nwords,) u32
+    result = jnp.ones(h1.shape, jnp.bool_)
+    for i in range(k):
+        idx = (h1 + jnp.uint32(i) * h2) % nb
+        word = jnp.take(bits, off + (idx >> jnp.uint32(5)).astype(jnp.int32))
+        bit = (word >> (idx & jnp.uint32(31))) & jnp.uint32(1)
+        result = result & (bit == jnp.uint32(1))
+    out_ref[...] = result
+
+
+def bloom_check_ragged(h1: jax.Array, h2: jax.Array, off: jax.Array,
+                       nbits: jax.Array, bits: jax.Array, *, k: int = 7,
+                       interpret: bool = False) -> jax.Array:
+    """Fused multi-cell membership: probe every query against ITS OWN cell's
+    bitset in one dispatch.
+
+    The per-cell bit arrays are packed back to back into one ``bits``
+    buffer; each query carries the word offset of its cell (``off``, i32)
+    and that cell's true modulus (``nbits``, u32).  Probe arithmetic is
+    bit-identical to the flat ``bloom_check`` — the modulus just became
+    per-query data instead of a static compile argument, so the jit cache
+    keys only on (Q, nwords, k) buckets.
+
+    h1, h2, off, nbits (Q,); bits (total_words,) u32 → (Q,) bool.
+    """
+    kernel = functools.partial(_ragged_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)] * 5,
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct(h1.shape, jnp.bool_),
+        interpret=interpret,
+    )(h1, h2, off, nbits, bits)

@@ -1,9 +1,17 @@
 """jit'd wrappers for bloom_check.
 
 ``might_contain`` is the raw device-array interface.  ``might_contain_batch``
-is the host-facing entry the storage engine's batched read pipeline uses:
-numpy in, numpy out, with query-count and bitset-word padding to power-of-two
-buckets so the jit cache stays small across cells of different sizes.
+is the host-facing entry for one cell's bitset; ``probe_cells_batch`` is the
+fused ragged entry the storage engine's existence path uses — every touched
+cell's bit array packed into one buffer, every (key, cell) pair probed in
+ONE dispatch.  Both are numpy in / numpy out, with query-count and
+bitset-word padding to power-of-two buckets so the jit cache stays small
+across cells of different sizes.
+
+``ragged_dispatch_count`` counts fused kernel dispatches since import — the
+observable the dispatch-budget tests (and the kvexists benchmark) assert
+against: one ``multi_exists`` batch must bump it by exactly one per store,
+however many cells the batch touches.
 """
 from __future__ import annotations
 
@@ -13,9 +21,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import bloom_check
-from .ref import bloom_check_ref
+from .kernel import bloom_check, bloom_check_ragged
+from .ref import bloom_check_ragged_ref, bloom_check_ref
 from ..padding import next_pow2
+
+ragged_dispatch_count = 0
 
 
 @functools.partial(jax.jit, static_argnames=("k", "nbits", "impl", "interpret"))
@@ -48,4 +58,47 @@ def might_contain_batch(h1: np.ndarray, h2: np.ndarray, bits: np.ndarray,
         bits = np.concatenate([bits, np.zeros(wp - bits.shape[0], np.uint32)])
     out = might_contain(jnp.asarray(h1), jnp.asarray(h2), jnp.asarray(bits),
                         k=k, nbits=nbits, impl=impl)
+    return np.asarray(out)[:q]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl", "interpret"))
+def probe_ragged(h1, h2, off, nbits, bits, *, k: int = 7,
+                 impl: str = "pallas", interpret: bool = True):
+    if impl == "pallas":
+        return bloom_check_ragged(h1, h2, off, nbits, bits, k=k,
+                                  interpret=interpret)
+    return bloom_check_ragged_ref(h1, h2, off, nbits, bits, k=k)
+
+
+def probe_cells_batch(h1: np.ndarray, h2: np.ndarray, off: np.ndarray,
+                      nbits: np.ndarray, bits: np.ndarray, *, k: int = 7,
+                      impl: str = "pallas") -> np.ndarray:
+    """Fused ragged membership: h1/h2 (Q,) u32, off (Q,) i32 word bases,
+    nbits (Q,) u32 per-query moduli, bits (total_words,) u32 packed cells
+    → (Q,) bool, in ONE kernel dispatch.
+
+    Padding queries probe slot 0 of word 0 with a modulus of 32 (always a
+    valid index into any non-empty packed buffer) and are sliced off;
+    padded bitset words are never indexed because each query's ``nbits``
+    bounds its probes inside its own cell.
+    """
+    q = len(h1)
+    if q == 0:
+        return np.zeros(0, dtype=bool)
+    qp = next_pow2(q)
+    if qp != q:
+        pad = qp - q
+        h1 = np.concatenate([h1, np.zeros(pad, np.uint32)])
+        h2 = np.concatenate([h2, np.ones(pad, np.uint32)])
+        off = np.concatenate([off, np.zeros(pad, np.int32)])
+        nbits = np.concatenate([nbits, np.full(pad, 32, np.uint32)])
+    wp = next_pow2(bits.shape[0])
+    if wp != bits.shape[0]:
+        bits = np.concatenate([bits, np.zeros(wp - bits.shape[0], np.uint32)])
+    global ragged_dispatch_count
+    ragged_dispatch_count += 1
+    out = probe_ragged(jnp.asarray(h1), jnp.asarray(h2),
+                       jnp.asarray(off, jnp.int32),
+                       jnp.asarray(nbits, jnp.uint32),
+                       jnp.asarray(bits), k=k, impl=impl)
     return np.asarray(out)[:q]

@@ -15,6 +15,17 @@ def bloom_check_ref(h1, h2, bits, *, k: int = 7, nbits=None):
     return result
 
 
+def bloom_check_ragged_ref(h1, h2, off, nbits, bits, *, k: int = 7):
+    """Oracle for the fused ragged probe: per-query modulus + word base."""
+    result = jnp.ones(h1.shape, jnp.bool_)
+    for i in range(k):
+        idx = (h1 + jnp.uint32(i) * h2) % nbits
+        word = bits[off + (idx >> jnp.uint32(5)).astype(jnp.int32)]
+        result = result & (((word >> (idx & jnp.uint32(31)))
+                            & jnp.uint32(1)) == jnp.uint32(1))
+    return result
+
+
 def bloom_add_ref(h1, h2, bits, *, k: int = 7, nbits=None):
     """Host-side add: returns updated bitset.  Uses np.bitwise_or.at so
     duplicate word indices within one batch accumulate correctly."""

@@ -107,6 +107,7 @@ class KvBatchServer:
         self.queue: collections.deque = collections.deque()
         self.batches_served = 0
         self.keys_served = 0
+        self.exists_served = 0
         self.writes_served = 0
         # Write-path counters: per-retired-stage records/bytes, so the
         # serving benchmark can report write amplification next to req/s
@@ -195,9 +196,13 @@ class KvBatchServer:
                 for r, v in zip(group, values):
                     r.value, r.found = v, v is not None
             else:
+                # One multi_exists per (exists, keyspace) group = one fused
+                # Bloom probe per store per stage (per shard when the
+                # engine is sharded), never one dispatch per touched cell.
                 flags = self.db.multi_exists(keys, keyspace=ks)
                 for r, f in zip(group, flags):
                     r.found = f
+                self.exists_served += len(group)
             now = time.time()
             for r in group:
                 r.done, r.t_done = True, now
@@ -272,6 +277,7 @@ class KvBatchServer:
             queued = len(self.queue)
         return {"batches_served": self.batches_served,
                 "keys_served": self.keys_served,
+                "exists_served": self.exists_served,
                 "writes_served": self.writes_served,
                 "write_stages": self.write_stages,
                 "write_bytes": self.write_bytes,

@@ -299,6 +299,33 @@ class TestShardedTideDB:
             shutil.rmtree(d1, ignore_errors=True)
             shutil.rmtree(d2, ignore_errors=True)
 
+    def test_multi_exists_parity_mixed_put_delete_stream(self, tmpdir,
+                                                         tmpdir2):
+        """Sharded existence answers equal the single-store oracle's under
+        an interleaved batched put/delete stream — before and after flush,
+        with dups and never-written keys in the probe, on both kernel
+        routings (the fused probe coalesces per shard either way)."""
+        universe = keys_n(240, "mx")
+        with TideDB(tmpdir, small_cfg()) as oracle, \
+                ShardedTideDB(tmpdir2, small_cfg(), n_shards=3) as sdb:
+            for db in (oracle, sdb):
+                db.put_many([(k, b"a%d" % i)
+                             for i, k in enumerate(universe[:180])])
+                db.delete_many(universe[60:120])
+                db.put_many([(k, b"b") for k in universe[90:100]])
+                db.delete_many(universe[:10])
+            probes = universe + universe[50:130]          # dups included
+            for opts in (None, ReadOptions(use_kernel=True),
+                         ReadOptions(use_kernel=False)):
+                assert sdb.multi_exists(probes, opts=opts) == \
+                    oracle.multi_exists(probes, opts=opts)
+            oracle.snapshot_now(flush_threshold=1)
+            sdb.snapshot_now(flush_threshold=1)
+            want = oracle.multi_exists(probes)
+            assert sdb.multi_exists(probes) == want
+            assert [sdb.exists(k) for k in probes] == want
+            assert sdb.stats()["fused_bloom_probes"] > 0
+
     def test_cross_shard_write_batch_and_reopen(self, tmpdir):
         cfg = small_cfg()
         ks = keys_n(40, "wb")
@@ -348,6 +375,35 @@ class TestKvBatchServerMixed:
             assert e2.found is False
             assert all(w.done and w.pos is not None for w in (w1, w2, w3))
             assert db.get(k) == b"v3"
+
+    def test_exists_stage_matches_scalar_execution(self, tmpdir):
+        """Exists stages served through the fused multi_exists path return
+        exactly what scalar program-order execution would: checks around
+        same-key puts/deletes in one drained batch observe every earlier
+        write and no later one."""
+        from repro.serving.engine import KvBatchServer
+        with TideDB(tmpdir, small_cfg()) as db:
+            ks = keys_n(120, "ex")
+            db.put_many([(k, b"seed") for k in ks[:60]])
+            db.snapshot_now(flush_threshold=1)   # blooms live for the stage
+            srv = KvBatchServer(db, max_batch=512)
+            model: dict = {k: True for k in ks[:60]}
+            checks = []
+            for i, k in enumerate(ks):
+                if i % 3 == 0:
+                    srv.submit_put(k, b"w%d" % i)
+                    model[k] = True
+                elif i % 3 == 1 and i % 2 == 1:
+                    srv.submit_delete(k)
+                    model[k] = False
+                checks.append((srv.submit_exists(k), model.get(k, False)))
+                if i % 4 == 2:       # re-check after more traffic lands
+                    srv.submit_put(ks[(i * 7) % 120], b"later")
+                    model[ks[(i * 7) % 120]] = True
+            srv.run_until_drained()
+            for req, want in checks:
+                assert req.done and req.found == want
+            assert srv.stats()["exists_served"] == len(checks)
 
     def test_keyspace_spelling_does_not_break_ordering(self, tmpdir):
         """A write addressed by keyspace *name* still orders against a

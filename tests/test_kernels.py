@@ -7,8 +7,10 @@ import pytest
 
 from hypothesis_compat import HealthCheck, given, settings, st
 
-from repro.kernels.bloom_check.kernel import bloom_check
-from repro.kernels.bloom_check.ref import bloom_add_ref, bloom_check_ref
+from repro.kernels.bloom_check.kernel import bloom_check, bloom_check_ragged
+from repro.kernels.bloom_check.ref import (bloom_add_ref,
+                                           bloom_check_ragged_ref,
+                                           bloom_check_ref)
 from repro.kernels.optimistic_lookup.kernel import optimistic_lookup
 from repro.kernels.optimistic_lookup.ops import lookup_positions
 from repro.kernels.optimistic_lookup.ref import optimistic_lookup_ref
@@ -200,6 +202,89 @@ class TestBloomCheck:
         bits = bloom_add_ref(h1, h2, bits)
         out = bloom_check(h1, h2, bits, interpret=True)
         assert bool(jnp.all(out))
+
+
+class TestBloomCheckRagged:
+    def _cells(self, seed, nwords_list, nadd_list, k=7):
+        """Per-cell bitsets built via the flat ref; returns packed buffer
+        plus per-cell (h1a, h2a) of added hashes."""
+        rng = np.random.default_rng(seed)
+        cells = []
+        for nwords, nadd in zip(nwords_list, nadd_list):
+            h1a = rng.integers(0, 2**32, nadd, dtype=np.uint32)
+            h2a = rng.integers(0, 2**32, nadd, dtype=np.uint32) | 1
+            bits = bloom_add_ref(jnp.asarray(h1a), jnp.asarray(h2a),
+                                 jnp.zeros((nwords,), jnp.uint32), k=k)
+            cells.append((np.asarray(bits), h1a, h2a, nwords * 32))
+        return cells
+
+    def _ragged_inputs(self, cells, n_miss, seed):
+        rng = np.random.default_rng(seed + 1)
+        h1, h2, off, nb = [], [], [], []
+        base = 0
+        bounds = []
+        for bits, h1a, h2a, nbits in cells:
+            h1m = rng.integers(0, 2**32, n_miss, dtype=np.uint32)
+            h2m = rng.integers(0, 2**32, n_miss, dtype=np.uint32) | 1
+            h1.extend([h1a, h1m]); h2.extend([h2a, h2m])
+            q = len(h1a) + n_miss
+            off.append(np.full(q, base, np.int32))
+            nb.append(np.full(q, nbits, np.uint32))
+            bounds.append((len(h1a), n_miss))
+            base += len(bits)
+        packed = np.concatenate([c[0] for c in cells])
+        return (np.concatenate(h1), np.concatenate(h2),
+                np.concatenate(off), np.concatenate(nb), packed, bounds)
+
+    @pytest.mark.parametrize("nwords_list,nadd_list", [
+        ([64, 256, 16], [20, 100, 4]),
+        ([2, 128, 2, 1024], [0, 50, 1, 400]),     # empty + tiny cells
+        ([512], [200]),                           # single cell
+    ])
+    def test_vs_ref_and_flat_percell(self, nwords_list, nadd_list):
+        """The fused kernel equals its jnp oracle AND the per-cell flat
+        kernel sliced back out — fusion introduces no false negatives."""
+        cells = self._cells(7, nwords_list, nadd_list)
+        h1, h2, off, nb, packed, bounds = self._ragged_inputs(cells, 25, 7)
+        out = bloom_check_ragged(jnp.asarray(h1), jnp.asarray(h2),
+                                 jnp.asarray(off), jnp.asarray(nb),
+                                 jnp.asarray(packed), interpret=True)
+        ref = bloom_check_ragged_ref(jnp.asarray(h1), jnp.asarray(h2),
+                                     jnp.asarray(off), jnp.asarray(nb),
+                                     jnp.asarray(packed))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        pos = 0
+        for (bits, h1a, h2a, nbits), (nadd, n_miss) in zip(cells, bounds):
+            q = nadd + n_miss
+            flat = bloom_check(jnp.asarray(h1[pos:pos + q]),
+                               jnp.asarray(h2[pos:pos + q]),
+                               jnp.asarray(bits), nbits=nbits,
+                               interpret=True)
+            np.testing.assert_array_equal(np.asarray(out[pos:pos + q]),
+                                          np.asarray(flat))
+            assert bool(np.all(np.asarray(out[pos:pos + nadd])))
+            pos += q
+
+    @given(seed=st.integers(0, 2**31 - 1),
+           shapes=st.lists(st.sampled_from([2, 8, 64, 256]),
+                           min_size=1, max_size=4))
+    @SETTINGS
+    def test_property_matches_percell(self, seed, shapes):
+        rng = np.random.default_rng(seed)
+        nadds = [int(rng.integers(0, nw * 3)) for nw in shapes]
+        cells = self._cells(seed, shapes, nadds)
+        h1, h2, off, nb, packed, bounds = self._ragged_inputs(cells, 9, seed)
+        out = np.asarray(bloom_check_ragged(
+            jnp.asarray(h1), jnp.asarray(h2), jnp.asarray(off),
+            jnp.asarray(nb), jnp.asarray(packed), interpret=True))
+        pos = 0
+        for (bits, _, _, nbits), (nadd, n_miss) in zip(cells, bounds):
+            q = nadd + n_miss
+            flat = bloom_check_ref(jnp.asarray(h1[pos:pos + q]),
+                                   jnp.asarray(h2[pos:pos + q]),
+                                   jnp.asarray(bits), nbits=nbits)
+            np.testing.assert_array_equal(out[pos:pos + q], np.asarray(flat))
+            pos += q
 
 
 class TestSsdScan:

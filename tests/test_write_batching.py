@@ -200,6 +200,17 @@ class TestPutMany:
             db.put_many([(k, b"first"), (k, b"second"), (k, b"third")])
             assert db.get(k) == b"third"
 
+    def test_one_shot_iterables_are_applied(self, tmpdir):
+        """Regression: put_many/delete_many read their input twice; a
+        generator argument must not leave WAL records unapplied to the
+        index (writes silently invisible until crash replay)."""
+        with TideDB(tmpdir, small_cfg()) as db:
+            ks = keys_n(30, tag="gen")
+            db.put_many((k, b"g%d" % i) for i, k in enumerate(ks))
+            assert db.multi_get(ks) == [b"g%d" % i for i in range(30)]
+            db.delete_many(k for k in ks[:10])
+            assert db.multi_exists(ks) == [False] * 10 + [True] * 20
+
     def test_invalidates_cached_values(self, tmpdir):
         with TideDB(tmpdir, small_cfg()) as db:
             ks = keys_n(20)
@@ -239,6 +250,57 @@ class TestPutMany:
             sdb.delete_many(ks[::2])
             assert all(sdb.get(k) is None for k in ks[::2])
             assert all(sdb.get(k) is not None for k in ks[1::2])
+
+
+class TestPerRecordEpochs:
+    def test_segment_epochs_match_scalar_appends(self, tmpdir):
+        """Regression (ROADMAP write follow-on): one mixed-epoch batch
+        spanning segments must tag each segment with ONLY the epochs of the
+        records landing in it — previously the whole batch's single epoch
+        tagged every touched segment."""
+        recs = _records([60, 120, 30, 200, 90, 40, 180, 15] * 4)
+        eps = [(i % 5) + 1 for i in range(len(recs))]
+        w1 = _wal(os.path.join(tmpdir, "a"))
+        w2 = _wal(os.path.join(tmpdir, "b"))
+        assert w1.append_many(recs, epochs=eps) == \
+            [w2.append(t, p, epoch=e) for (t, p), e in zip(recs, eps)]
+        assert w1.segment_epochs() == w2.segment_epochs()
+        for probe in (1, 3, 6):
+            assert w1.segments_expired_below_epoch(probe) == \
+                w2.segments_expired_below_epoch(probe)
+        w1.close()
+        w2.close()
+
+    def test_uniform_epoch_unchanged_and_misaligned_rejected(self, tmpdir):
+        w = _wal(tmpdir)
+        recs = _records([50, 50, 50])
+        w.append_many(recs, epoch=7)
+        assert all(rng == (7, 7) for rng in w.segment_epochs().values())
+        with pytest.raises(ValueError):
+            w.append_many(recs, epochs=[1, 2])   # must align 1:1
+        w.close()
+
+    def test_put_many_triples_tag_per_record(self, tmpdir):
+        """(key, value, epoch) triples flow through the whole pipeline:
+        payload epochs round-trip via replay and segment ranges match the
+        same ops issued scalar."""
+        from repro.core.tidestore.wal import decode_entry
+        ks = keys_n(40, tag="ep")
+        items = [(k, b"v%02d" % i, i // 8 + 1) for i, k in enumerate(ks)]
+        d1, d2 = os.path.join(tmpdir, "a"), os.path.join(tmpdir, "b")
+        cfg = small_cfg(wal=WalConfig(segment_size=1024, background=False))
+        db1, db2 = TideDB(d1, cfg), TideDB(d2, cfg)
+        assert db1.put_many(items) == \
+            [db2.put(k, v, epoch=e) for k, v, e in items]
+        assert db1.value_wal.segment_epochs() == \
+            db2.value_wal.segment_epochs()
+        got = {key: epoch for _, rtype, payload in db1.value_wal.iter_records()
+               if rtype == T_ENTRY
+               for _, key, _, epoch in [decode_entry(payload)]}
+        assert got == {k: e for k, _, e in items}
+        assert db1.multi_get(ks) == db2.multi_get(ks)
+        db1.close()
+        db2.close()
 
 
 class TestApplyManyParity:
