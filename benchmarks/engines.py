@@ -21,8 +21,8 @@ from repro.core.tidestore import (DbConfig, KeyspaceConfig, ShardedTideDB,
 from repro.core.tidestore.wal import WalConfig
 
 
-def _tide_cfg(relocation=False):
-    return DbConfig(
+def _tide_cfg(relocation=False, copy_threads=None):
+    cfg = DbConfig(
         keyspaces=[KeyspaceConfig("default", n_cells=256,
                                   dirty_flush_threshold=2048)],
         wal=WalConfig(segment_size=8 * 1024 * 1024),
@@ -30,10 +30,13 @@ def _tide_cfg(relocation=False):
         relocation=relocation,
         cache_bytes=8 * 1024 * 1024,
     )
+    if copy_threads is not None:
+        cfg.copy_threads = copy_threads
+    return cfg
 
 
-def make_tide(path, relocation=False):
-    return TideDB(path, _tide_cfg(relocation))
+def make_tide(path, relocation=False, copy_threads=None):
+    return TideDB(path, _tide_cfg(relocation, copy_threads=copy_threads))
 
 
 def make_tide_sharded(path, n_shards=4):

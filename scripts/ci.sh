@@ -23,6 +23,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # enough below it that loaded CI runners can't flake it.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kv_write --smoke
 
+# Parallel-copy smoke: 64 KB values, best-of-3 — parallel payload copiers
+# must not lose to a single copier (the real bar is >=2x vs the staged
+# pre-parallel path, checked by the full kvwrite sweep).  Skips gracefully
+# on single-core runners.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kv_write --smoke-parallel
+
 # Existence-path smoke: one fused ragged Bloom probe must not lose to the
 # per-cell dispatch path (real bar: >=2x at batch>=256 on >=16 cells,
 # checked by `python -m benchmarks.run --only kvexists`).

@@ -9,12 +9,13 @@ from .large_table import CellState, KeyspaceConfig, LargeTable
 from .relocate import Decision, Relocator
 from .shard import ShardedTideDB
 from .util import Metrics, PositionTracker
-from .wal import Wal, WalConfig
+from .wal import CopyPool, Wal, WalConfig
 
 __all__ = [
     "TideDB", "ShardedTideDB", "DbConfig", "KeyspaceConfig", "CellState",
     "LargeTable", "Engine", "KeyspaceHandle", "WriteBatch", "ReadOptions",
-    "WriteOptions", "Wal", "WalConfig", "Relocator", "Decision", "Metrics",
-    "PositionTracker", "LruCache", "BlobArrayCache", "OptimisticLookup",
-    "HeaderLookup", "serialize_optimistic", "serialize_header",
+    "WriteOptions", "Wal", "WalConfig", "CopyPool", "Relocator", "Decision",
+    "Metrics", "PositionTracker", "LruCache", "BlobArrayCache",
+    "OptimisticLookup", "HeaderLookup", "serialize_optimistic",
+    "serialize_header",
 ]

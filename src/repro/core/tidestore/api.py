@@ -62,10 +62,20 @@ class WriteOptions:
 
     - ``durability``: ``"async"`` (OS page cache now, fsync via the syncer —
       the paper's default tier, §3.1) or ``"sync"`` (fsync before return).
+      Sync durability waits for every payload copy in flight before the
+      fsync (the WAL's completion latch), so an acknowledged record can
+      never be dropped by crash replay in favour of an unwritten hole.
     - ``epoch``: epoch tag for segment-granular pruning (§4.4).
+    - ``parallel_copy``: route this call's payload copies across the
+      engine's copier pool (``DbConfig.copy_threads``).  ``None`` (default)
+      uses the pool; ``False`` keeps the copies on the calling thread —
+      still outside the allocation lock, so concurrent writers overlap
+      regardless.  Has no effect on scalar ``put``/``delete`` (one record
+      copies inline either way) or on atomic ``write_batch``.
     """
     durability: str = "async"
     epoch: int = 0
+    parallel_copy: Optional[bool] = None
 
     def __post_init__(self):
         if self.durability not in ("async", "sync"):
@@ -187,8 +197,13 @@ class KeyspaceHandle:
         ``write_batch`` for all-or-nothing semantics."""
         return self.engine.put_many(items, keyspace=self.name, opts=opts)
 
-    def delete_many(self, keys, opts: Optional[WriteOptions] = None) -> list:
-        return self.engine.delete_many(keys, keyspace=self.name, opts=opts)
+    def delete_many(self, keys, opts: Optional[WriteOptions] = None,
+                    epochs=None) -> list:
+        """Batched delete; ``epochs`` optionally tags each tombstone
+        individually (aligned with ``keys``), mirroring ``put_many``'s
+        (key, value, epoch) triples."""
+        return self.engine.delete_many(keys, keyspace=self.name, opts=opts,
+                                       epochs=epochs)
 
     def batch(self) -> WriteBatch:
         """A ``WriteBatch`` whose ops default to this keyspace."""
@@ -238,7 +253,8 @@ class Engine(Protocol):
                  opts: Optional[WriteOptions] = None) -> list: ...
 
     def delete_many(self, keys, keyspace=0,
-                    opts: Optional[WriteOptions] = None) -> list: ...
+                    opts: Optional[WriteOptions] = None,
+                    epochs=None) -> list: ...
 
     def write_batch(self, ops,
                     opts: Optional[WriteOptions] = None) -> list: ...

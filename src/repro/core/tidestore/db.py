@@ -26,9 +26,16 @@ from .relocate import Relocator, RelocatorThread
 from .snapshot import (SnapshotThread, capture_state, read_control_region,
                        write_control_region)
 from .util import Metrics
-from .wal import (HEADER_SIZE, T_ENTRY, T_INDEX, T_TOMBSTONE, Wal, WalConfig,
-                  decode_entry, decode_tombstone, encode_entry,
-                  encode_tombstone)
+from .wal import (_ENTRY_HDR, HEADER_SIZE, T_ENTRY, T_INDEX, T_TOMBSTONE,
+                  CopyPool, Wal, WalConfig, decode_entry, decode_tombstone,
+                  encode_entry, encode_tombstone, payload_len)
+
+# Values below this stage through one ``encode_entry`` concatenation; at or
+# above it the entry rides to ``pwritev`` as uncopied iovec parts.  For tiny
+# values the staging copy is cheaper than the multi-part bookkeeping (extra
+# crc32 calls, longer iovecs); for large values the copy is the cost the
+# parallel-copy protocol exists to remove.
+_STAGE_VALUE_MAX = 4096
 
 
 @dataclass
@@ -47,17 +54,26 @@ class DbConfig:
     batched_kernels: bool = True           # route multi_get/multi_exists
                                            # through the Pallas kernel wrappers
     blob_cache_bytes: int = 8 * 1024 * 1024  # parsed index-blob memo budget
+    copy_threads: int = 4                  # parallel payload copiers (§3.1);
+                                           # 1 = inline copies, still lock-free
 
 
 class TideDB:
-    def __init__(self, path: str, config: Optional[DbConfig] = None):
+    def __init__(self, path: str, config: Optional[DbConfig] = None, *,
+                 copy_pool: Optional[CopyPool] = None):
         self.path = path
         self.cfg = config or DbConfig()
         os.makedirs(path, exist_ok=True)
         self.metrics = Metrics()
 
-        self.value_wal = Wal(path, "value", self.cfg.wal, self.metrics)
-        self.index_wal = Wal(path, "index", self.cfg.index_wal, self.metrics)
+        # One copier pool shared by both WALs (an injected pool — e.g. from
+        # ShardedTideDB — is shared wider and owned by the injector).
+        self._copy_pool = copy_pool or CopyPool(self.cfg.copy_threads)
+        self._owns_copy_pool = copy_pool is None
+        self.value_wal = Wal(path, "value", self.cfg.wal, self.metrics,
+                             copy_pool=self._copy_pool)
+        self.index_wal = Wal(path, "index", self.cfg.index_wal, self.metrics,
+                             copy_pool=self._copy_pool)
         self.table = LargeTable(self.cfg.keyspaces, self.index_wal.pread,
                                 self.metrics,
                                 blob_cache_bytes=self.cfg.blob_cache_bytes)
@@ -150,15 +166,25 @@ class TideDB:
             return replace(opts, epoch=epoch)
         return opts
 
+    @staticmethod
+    def _entry_parts(ks_id: int, key: bytes, value: bytes, epoch: int):
+        """The entry payload for the WAL: small values staged through one
+        ``encode_entry`` concatenation (cheaper than multi-part
+        bookkeeping), large values as iovec parts — the value buffer then
+        rides to ``pwritev`` uncopied."""
+        if len(value) < _STAGE_VALUE_MAX:
+            return encode_entry(ks_id, key, value, epoch)
+        return [_ENTRY_HDR.pack(ks_id, len(key), epoch), key, value]
+
     def put(self, key: bytes, value: bytes, keyspace=0, epoch: int = 0,
             opts: Optional[WriteOptions] = None) -> int:
         opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
-        payload = encode_entry(ks_id, key, value, opts.epoch)
+        payload = self._entry_parts(ks_id, key, value, opts.epoch)
         pos = self.value_wal.append(T_ENTRY, payload, opts.epoch,
                                     app_bytes=len(key) + len(value))
         self.table.apply(ks_id, key, pos)
-        self.value_wal.mark_processed(pos, len(payload))
+        self.value_wal.mark_processed(pos, payload_len(payload))
         self.cache.invalidate(self._cache_key(ks_id, key))
         if opts.durability == "sync":
             self.value_wal.flush()
@@ -182,19 +208,23 @@ class TideDB:
                     app_bytes: int, opts: WriteOptions,
                     epochs=None) -> list:
         """The batched write pipeline, shared by ``put_many`` and
-        ``delete_many``: append (one allocation-lock acquisition, coalesced
-        pwrite runs) → apply (one row-lock acquisition per cell) → mark
-        processed (one tracker acquisition) → one cache invalidation sweep
-        → optional sync flush.  The ordering is correctness-critical and
-        mirrors the scalar write flow (§3.1 steps 1–4)."""
+        ``delete_many``: append (one allocation-lock acquisition, payload
+        copies fanned across the copier pool outside the lock) → apply (one
+        row-lock acquisition per cell) → mark processed (one tracker
+        acquisition) → one cache invalidation sweep → optional sync flush.
+        The ordering is correctness-critical and mirrors the scalar write
+        flow (§3.1 steps 1–4); ``append_many`` returns only after every
+        copy completes, so markers are applied for fully-written records
+        only, and the sync flush rides the WAL's completion latch."""
         positions = self.value_wal.append_many(records, opts.epoch,
                                                app_bytes=app_bytes,
-                                               epochs=epochs)
+                                               epochs=epochs,
+                                               parallel=opts.parallel_copy)
         self.table.apply_many(
             [(ks_id, key, marker_of(pos))
              for key, pos in zip(keys, positions)])
         self.value_wal.mark_processed_many(
-            (pos, len(p)) for pos, (_, p) in zip(positions, records))
+            (pos, payload_len(p)) for pos, (_, p) in zip(positions, records))
         self.cache.invalidate_many(
             [self._cache_key(ks_id, k) for k in keys])
         if opts.durability == "sync":
@@ -231,26 +261,41 @@ class TideDB:
             e = item[2] if len(item) > 2 else opts.epoch
             mixed = mixed or e != opts.epoch
             epochs.append(e)
-            records.append((T_ENTRY, encode_entry(ks_id, key, value, e)))
+            records.append((T_ENTRY, self._entry_parts(ks_id, key, value, e)))
             app_bytes += len(key) + len(value)
         return self._write_many(ks_id, records, [it[0] for it in items],
                                 lambda pos: pos, app_bytes, opts,
                                 epochs=epochs if mixed else None)
 
     def delete_many(self, keys, keyspace=0, epoch: int = 0,
-                    opts: Optional[WriteOptions] = None) -> list:
+                    opts: Optional[WriteOptions] = None,
+                    epochs=None) -> list:
         """Batched ``delete``; same pipeline and non-atomicity as
-        ``put_many``.  Returns WAL positions aligned with ``keys``."""
+        ``put_many``.  Returns WAL positions aligned with ``keys``.
+
+        ``epochs`` optionally carries one epoch per key (aligned with
+        ``keys``), the tombstone twin of ``put_many``'s (key, value, epoch)
+        triples: each tombstone tags only the segment it lands in, exactly
+        as N scalar deletes would, so mixed-epoch batches never widen a
+        segment's pruning range."""
         keys = list(keys)         # may be a one-shot iterable; read twice
         if not keys:
             return []
         opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
-        records = [(T_TOMBSTONE, encode_tombstone(ks_id, key, opts.epoch))
-                   for key in keys]
+        if epochs is not None:
+            epochs = list(epochs)
+            if len(epochs) != len(keys):
+                raise ValueError("epochs must align 1:1 with keys")
+            if all(e == opts.epoch for e in epochs):
+                epochs = None     # uniform: batch-level tagging is identical
+        eps = epochs if epochs is not None else [opts.epoch] * len(keys)
+        records = [(T_TOMBSTONE, encode_tombstone(ks_id, key, e))
+                   for key, e in zip(keys, eps)]
         return self._write_many(ks_id, records, keys,
                                 lambda pos: TOMB_FLAG | pos,
-                                sum(len(k) for k in keys), opts)
+                                sum(len(k) for k in keys), opts,
+                                epochs=epochs)
 
     def write_batch(self, ops, epoch: int = 0,
                     opts: Optional[WriteOptions] = None) -> list:
@@ -268,8 +313,8 @@ class TideDB:
             if op[0] == "put":
                 _, ks, key, value = op
                 ks_id = self._ks_id(ks)
-                subrecords.append((T_ENTRY,
-                                   encode_entry(ks_id, key, value, opts.epoch)))
+                subrecords.append((T_ENTRY, self._entry_parts(
+                    ks_id, key, value, opts.epoch)))
                 metas.append((ks_id, key, False))
                 app_bytes += len(key) + len(value)
             else:
@@ -288,7 +333,7 @@ class TideDB:
              for (ks_id, key, is_del), pos in zip(metas, sub_positions)])
         self.cache.invalidate_many(
             [self._cache_key(ks_id, key) for ks_id, key, _ in metas])
-        body_len = sum(HEADER_SIZE + len(p) for _, p in subrecords)
+        body_len = sum(HEADER_SIZE + payload_len(p) for _, p in subrecords)
         self.value_wal.mark_processed(batch_pos, body_len)
         if opts.durability == "sync":
             self.value_wal.flush()
@@ -521,6 +566,8 @@ class TideDB:
         self.flusher.close()
         self.value_wal.close()
         self.index_wal.close()
+        if self._owns_copy_pool:
+            self._copy_pool.close()
 
     # ------------------------------------------------------------- insights
     def stats(self) -> dict:

@@ -266,12 +266,62 @@ class LargeTable:
             return True
 
     # ---------------------------------------------------------------- reads
+    def _bounded_pread(self, base: int, lim: int):
+        """Index Store pread clamped to the blob at [base, base + lim):
+        the single source of the bound arithmetic every disk-index reader
+        shares (an ``off`` at/past ``lim`` degenerates to a short read the
+        callers already treat as a GC race)."""
+        return lambda off, n: self._index_pread(base + off, min(n, lim - off))
+
+    def _ensure_bloom(self, ks: Keyspace, cell: Cell) -> None:
+        """Lazy Bloom rebuild on first probe after reopen (§3.2): recovery
+        restores cell disk pointers but not filters (those are rebuilt only
+        at flush time), so a freshly reopened store would answer every cold
+        ``exists`` through Index Store reads until the first flush.  The
+        first probe of a disk-resident, filterless cell rebuilds the filter
+        from the on-disk index *outside* the row lock (one blob read, paid
+        once per cell per process), seeds it with the live dirty buffer
+        under the lock, and installs it only if the cell still points at
+        the same blob — a racing flush installs its own complete filter
+        and wins.  Keys applied after the install reach the filter through
+        the normal ``apply`` path (bloom is non-None from then on)."""
+        if cell.bloom is not None or not ks.cfg.use_bloom:
+            return
+        # Unlocked pre-check (racy reads, re-verified under the lock): a
+        # never-flushed cell has no disk blob to rebuild from, and must not
+        # pay a second row-lock acquisition on every probe forever.
+        if cell.disk_pos is None or cell.state not in (
+                CellState.UNLOADED, CellState.DIRTY_UNLOADED):
+            return
+        with ks.row_lock(cell.cell_id):
+            if (cell.bloom is not None
+                    or cell.state not in (CellState.UNLOADED,
+                                          CellState.DIRTY_UNLOADED)
+                    or not cell.has_disk()):
+                return
+            snap = (cell.disk_pos, cell.disk_len, cell.disk_count)
+        _, _, load_fn = FORMATS[ks.cfg.index_format]
+        try:
+            entries = load_fn(self._bounded_pread(snap[0], snap[1]),
+                              snap[2], ks.cfg.key_len)
+        except Exception:
+            return          # GC/flush race: keep answering through disk reads
+        if len(entries) < snap[2]:
+            return          # short read (blob replaced underneath us)
+        bloom = BloomFilter(max(snap[2], 64), ks.cfg.bloom_bits_per_key)
+        bloom.add_many([k for k, p in entries if not is_tombstone(p)])
+        with ks.row_lock(cell.cell_id):
+            if cell.bloom is None and cell.disk_pos == snap[0]:
+                bloom.add_many([k for k, p in cell.mem.items()
+                                if not is_tombstone(p)])
+                cell.bloom = bloom
+                self.metrics.add(bloom_lazy_rebuilds=1)
+
     def _disk_lookup(self, ks: Keyspace, cell: Cell, key: bytes) -> Optional[int]:
         if not cell.has_disk():
             return None
         _, lookup_cls, _ = FORMATS[ks.cfg.index_format]
-        base = cell.disk_pos
-        pread = lambda off, n: self._index_pread(base + off, min(n, cell.disk_len - off))
+        pread = self._bounded_pread(cell.disk_pos, cell.disk_len)
         lk = lookup_cls(pread, cell.disk_count, ks.cfg.key_len,
                         window_entries=ks.cfg.window_entries, metrics=self.metrics)
         pos, _ = lk.lookup(key)
@@ -310,6 +360,7 @@ class LargeTable:
         cell = ks.cell_for_key(key, create=False)
         if cell is None:
             return False
+        self._ensure_bloom(ks, cell)       # first probe after reopen rebuilds
         with ks.row_lock(cell.cell_id):
             if cell.bloom is not None and not cell.bloom.might_contain(key):
                 self.metrics.add(bloom_negative=1)
@@ -398,6 +449,8 @@ class LargeTable:
                 for k in qs:
                     out[k] = None
                 continue
+            if use_bloom:
+                self._ensure_bloom(ks, cell)   # lazy rebuild after reopen
             with ks.row_lock(cid):
                 missing = []
                 for k in qs:
@@ -474,6 +527,7 @@ class LargeTable:
         for cell, qs in by_cell.values():
             gated, bloom = [], None
             if use_bloom:
+                self._ensure_bloom(ks, cell)   # lazy rebuild after reopen
                 with ks.row_lock(cell.cell_id):
                     if cell.has_disk() and cell.state in (
                             CellState.UNLOADED, CellState.DIRTY_UNLOADED):
@@ -501,9 +555,7 @@ class LargeTable:
         for cell, missing, dpos, dlen, dcount in blob_cells:
             ent = self.blob_cache.get(dpos)
             if ent is None:
-                pread = (lambda base, lim: lambda off, n:
-                         self._index_pread(base + off,
-                                           min(n, lim - off)))(dpos, dlen)
+                pread = self._bounded_pread(dpos, dlen)
                 buf, n = load_blob_arrays(pread, dcount, key_len, fmt)
                 if n < dcount:          # short read (GC race): per-key retry
                     perkey.extend((cell, k) for k in missing)
@@ -621,8 +673,7 @@ class LargeTable:
         if not cell.has_disk():
             return []
         _, _, load_fn = FORMATS[ks.cfg.index_format]
-        base = cell.disk_pos
-        pread = lambda off, n: self._index_pread(base + off, min(n, cell.disk_len - off))
+        pread = self._bounded_pread(cell.disk_pos, cell.disk_len)
         return load_fn(pread, cell.disk_count, ks.cfg.key_len)
 
     def evict_cell(self, ks_id: int, cell: Cell) -> bool:
@@ -693,9 +744,7 @@ class LargeTable:
             if cell.state in (CellState.UNLOADED, CellState.DIRTY_UNLOADED) \
                     and cell.has_disk():
                 _, lookup_cls, _ = FORMATS[ks.cfg.index_format]
-                base = cell.disk_pos
-                pread = lambda off, n: self._index_pread(
-                    base + off, min(n, cell.disk_len - off))
+                pread = self._bounded_pread(cell.disk_pos, cell.disk_len)
                 lk = lookup_cls(pread, cell.disk_count, ks.cfg.key_len,
                                 window_entries=ks.cfg.window_entries,
                                 metrics=self.metrics)

@@ -35,6 +35,7 @@ from typing import Optional
 from .api import (KeyspaceHandle, ReadOptions, WriteBatch, WriteOptions,
                   coerce_batch)
 from .db import DbConfig, TideDB
+from .wal import CopyPool
 
 
 def _per_shard_config(cfg: DbConfig, n_shards: int) -> DbConfig:
@@ -69,7 +70,13 @@ class ShardedTideDB:
         shard_cfg = (_per_shard_config(self.cfg, n_shards) if scale_cells
                      else self.cfg)
         os.makedirs(path, exist_ok=True)
-        self.shards = [TideDB(os.path.join(path, f"shard-{i:02d}"), shard_cfg)
+        # ONE copier pool shared by every shard's WALs: parallel payload
+        # copies stay bounded at cfg.copy_threads for the whole store, not
+        # N shards × M copiers (each shard's fan-out thread additionally
+        # copies its own first sub-run, so per-shard writes still overlap).
+        self._copy_pool = CopyPool(self.cfg.copy_threads)
+        self.shards = [TideDB(os.path.join(path, f"shard-{i:02d}"), shard_cfg,
+                              copy_pool=self._copy_pool)
                        for i in range(n_shards)]
         self._pool = ThreadPoolExecutor(max_workers=threads or n_shards,
                                         thread_name_prefix="tide-shard")
@@ -171,21 +178,32 @@ class ShardedTideDB:
                                                       opts=opts)
 
     def _fanout_writes(self, method: str, items: list, key_of,
-                       keyspace, epoch, opts) -> list:
+                       keyspace, epoch, opts, epochs=None) -> list:
         """Shared scatter/gather for the batched write entry points: group
         item indices per shard, single-shard fast path, pool fan-out,
-        aligned merge of per-shard positions."""
+        aligned merge of per-shard positions.  An aligned ``epochs`` vector
+        splits per shard alongside the items."""
         if not items:
             return []
+        if epochs is not None and len(epochs) != len(items):
+            raise ValueError("epochs must align 1:1 with keys")
         groups = self._group_indices([key_of(it) for it in items])
+
+        def kwargs_for(idx):
+            if epochs is None:
+                return {}
+            return {"epochs": [epochs[j] for j in idx]}
+
         if len(groups) == 1:
-            ((sid, _),) = groups.items()
+            ((sid, idx),) = groups.items()
             return getattr(self.shards[sid], method)(items, keyspace, epoch,
-                                                     opts=opts)
+                                                     opts=opts,
+                                                     **kwargs_for(idx))
 
         def work(sid, idx):
             return getattr(self.shards[sid], method)(
-                [items[j] for j in idx], keyspace, epoch, opts=opts)
+                [items[j] for j in idx], keyspace, epoch, opts=opts,
+                **kwargs_for(idx))
 
         futures = {sid: self._pool.submit(work, sid, idx)
                    for sid, idx in groups.items()}
@@ -198,17 +216,24 @@ class ShardedTideDB:
     def put_many(self, items, keyspace=0, epoch: int = 0,
                  opts: Optional[WriteOptions] = None) -> list:
         """Batched put fanned out per shard: one ``append_many`` (one
-        allocation-lock acquisition, coalesced pwrite runs) per shard with
-        the work submitted to the pool.  Positions are per-shard offsets
-        aligned with ``items``; like ``TideDB.put_many`` this is NOT atomic."""
+        allocation-lock acquisition, parallel payload copies through the
+        store-wide copier pool) per shard with the work submitted to the
+        thread pool.  Positions are per-shard offsets aligned with
+        ``items``; like ``TideDB.put_many`` this is NOT atomic."""
         return self._fanout_writes("put_many", list(items),
                                    lambda it: it[0], keyspace, epoch, opts)
 
     def delete_many(self, keys, keyspace=0, epoch: int = 0,
-                    opts: Optional[WriteOptions] = None) -> list:
-        """Batched delete fanned out per shard (see ``put_many``)."""
+                    opts: Optional[WriteOptions] = None,
+                    epochs=None) -> list:
+        """Batched delete fanned out per shard (see ``put_many``).  The
+        optional ``epochs`` vector (one per key, aligned) splits per shard
+        with its keys, so each tombstone tags its shard's segment exactly
+        as a scalar delete with that epoch would."""
         return self._fanout_writes("delete_many", list(keys),
-                                   lambda k: k, keyspace, epoch, opts)
+                                   lambda k: k, keyspace, epoch, opts,
+                                   epochs=list(epochs) if epochs is not None
+                                   else None)
 
     def write_batch(self, ops, epoch: int = 0,
                     opts: Optional[WriteOptions] = None) -> list:
@@ -268,6 +293,7 @@ class ShardedTideDB:
         for f in [self._pool.submit(sh.close, flush) for sh in self.shards]:
             f.result()
         self._pool.shutdown(wait=True)
+        self._copy_pool.close()
 
     def __enter__(self):
         return self

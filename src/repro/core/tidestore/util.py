@@ -18,6 +18,16 @@ def crc32(payload: bytes) -> int:
     return zlib.crc32(payload) & 0xFFFFFFFF
 
 
+def crc32_parts(parts, base: int = 0) -> int:
+    """CRC of the concatenation of ``parts`` without materializing it —
+    ``crc32_parts([a, b]) == crc32(a + b)``.  ``zlib.crc32`` releases the
+    GIL on large buffers, so copier threads checksum in parallel."""
+    c = base
+    for p in parts:
+        c = zlib.crc32(p, c)
+    return c & 0xFFFFFFFF
+
+
 class PositionTracker:
     """Tracks completion of [start, end) ranges and exposes the highest
     contiguous watermark.  Mirrors the paper's asynchronous-controller
@@ -94,7 +104,9 @@ class Metrics:
     batched_write_records: int = 0     # records entering append_many
     blob_cache_hits: int = 0           # memoized parsed-blob reuses
     bloom_negative: int = 0
+    bloom_lazy_rebuilds: int = 0       # filters rebuilt on first post-reopen probe
     fused_bloom_probes: int = 0        # fused ragged probes (1 per batch)
+    parallel_copy_subruns: int = 0     # pwritev sub-runs issued by append_many
     cache_hits: int = 0
     cache_misses: int = 0
     relocated_entries: int = 0

@@ -5,16 +5,28 @@ Design notes (mapping to the paper):
 - The WAL is a sequence of fixed-size *segments* (the paper's memory-mapped
   "maps" / files).  A global byte position addresses the whole log:
   ``segment = pos // segment_size``, ``offset = pos % segment_size``.
-- **Atomic allocation, parallel copy**: ``append`` grabs the allocation lock
-  only to bump the tail and write the 9-byte record header; the (large) value
-  payload is copied with ``os.pwrite`` *outside* the lock, so concurrent
-  writers saturate the device.  Because headers are written under the
-  allocation lock in position order, replay always knows record boundaries
-  even when a payload write was torn by a crash (CRC catches it, ``len``
-  lets us skip it).
+- **Atomic allocation, parallel copy** (§3.1, reserve → copy → commit):
+  the allocation lock covers only position reservation and bookkeeping
+  (tail bump, segment rolls, fd resolution, dirty-segment marking); the
+  record bytes — header *and* payload — are copied outside the lock with
+  ``os.pwritev``, whose iovec is the record parts themselves (no staging
+  ``b"".join`` copy) and which releases the GIL, so concurrent writers
+  genuinely saturate the device.  Batched appends additionally split their
+  coalesced same-segment runs across a pool of copier threads
+  (``CopyPool``), the paper's parallel-copy claim at 48 writer threads.
+- **Visibility/durability gate**: positions are returned (and therefore
+  index-applied and ``mark_processed``-ed) only after their copies
+  complete.  Every reservation opens a completion latch under the
+  allocation lock; ``flush()`` waits for all latches open at its start
+  before fsyncing, so a sync-acknowledged record can never sit above a
+  reserved-but-unwritten hole at fsync time.  After a crash, such a hole
+  reads as zeros — a ``T_PAD`` header — and replay treats it exactly like
+  a torn tail: the remainder of that segment is dropped (only
+  fully-copied records are ever visible), later segments replay normally.
 - **Batched appends** (``append_many``): one allocation-lock acquisition
   reserves positions for a whole batch (rolls handled vectorized), then the
-  records are written as coalesced per-segment runs with one ``pwrite`` each.
+  records are written as coalesced per-segment runs — one ``pwritev`` per
+  run, split into sub-runs across the copy pool when runs are large.
   Positions are byte-identical to N sequential ``append`` calls; batched
   appends are *not* atomic — each record replays independently, and batch
   atomicity stays with ``append_batch``'s outer BATCH record.
@@ -39,12 +51,105 @@ import os
 import struct
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, Iterator, Optional
 
 import numpy as np
 
-from .util import Metrics, PositionTracker, crc32
+from .util import Metrics, PositionTracker, crc32, crc32_parts
+
+# ``os.pwritev`` is POSIX-only (and absent on some exotic builds); the
+# module-level flag routes every run write so tests can force the fallback
+# and keep both branches covered.
+HAVE_PWRITEV = hasattr(os, "pwritev")
+try:
+    _IOV_MAX = os.sysconf("SC_IOV_MAX")
+    if _IOV_MAX <= 0:
+        _IOV_MAX = 1024
+except (AttributeError, OSError, ValueError):
+    _IOV_MAX = 1024
+
+
+def write_parts(fd, parts, off: int) -> int:
+    """Positional vectored write: the iovec list is the caller's buffers
+    themselves, so record headers and payloads reach the kernel without a
+    staging ``b"".join`` copy.  Handles short vectored writes (resume where
+    the kernel stopped) and iovec lists longer than ``IOV_MAX``.  Platforms
+    without ``os.pwritev`` take the single-``pwrite`` fallback — one staged
+    join, the pre-parallel-copy write path.  Returns bytes written."""
+    if not HAVE_PWRITEV:
+        buf = parts[0] if len(parts) == 1 else b"".join(parts)
+        mv = memoryview(buf)
+        done = 0
+        while done < len(buf):
+            n = os.pwrite(fd, mv[done:], off + done)
+            if n <= 0:                    # defensive: no forward progress
+                raise OSError(f"pwrite wrote {n} of {len(buf) - done} bytes")
+            done += n
+        return len(buf)
+    total = 0
+    pending = [p for p in parts if len(p)]
+    while pending:
+        n = os.pwritev(fd, pending[:_IOV_MAX], off)
+        total += n
+        off += n
+        k = 0
+        while k < len(pending) and n >= len(pending[k]):
+            n -= len(pending[k])
+            k += 1
+        pending = pending[k:]
+        if n and pending:
+            pending[0] = memoryview(pending[0])[n:]
+    return total
+
+
+class CopyPool:
+    """Shared pool of payload-copier threads (§3.1 parallel copy).
+
+    ``threads`` is the number of concurrent copiers *including the calling
+    thread*, so the executor holds ``threads - 1`` workers and the caller
+    always copies the first sub-run itself — ``threads <= 1`` degenerates
+    to inline copies with zero dispatch overhead.  One pool may serve any
+    number of ``Wal`` instances: ``TideDB`` shares one between its value
+    and index WALs, and ``ShardedTideDB`` hands every shard the same pool
+    so N shards × M copiers never oversubscribes the host.  ``pwritev``
+    releases the GIL, so copies genuinely run in parallel.
+    """
+
+    def __init__(self, threads: int = 1):
+        self.threads = max(1, int(threads))
+        self._pool = (ThreadPoolExecutor(max_workers=self.threads - 1,
+                                         thread_name_prefix="tide-copy")
+                      if self.threads > 1 else None)
+
+    def run(self, fn, jobs) -> None:
+        """Run ``fn`` over ``jobs``, fanned across the copiers.  Always
+        waits for every job before returning — even when one raises — so a
+        caller's completion latch never releases with a copy still in
+        flight; the first exception is re-raised after the barrier."""
+        if self._pool is None or len(jobs) <= 1:
+            for job in jobs:
+                fn(job)
+            return
+        futures = [self._pool.submit(fn, job) for job in jobs[1:]]
+        err = None
+        try:
+            fn(jobs[0])                   # the calling thread is a copier too
+        except BaseException as e:
+            err = e
+        for f in futures:
+            try:
+                f.result()
+            except BaseException as e:
+                if err is None:
+                    err = e
+        if err is not None:
+            raise err
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
 
 # Record types.
 T_PAD = 0        # zeroed space at segment end: jump to next segment
@@ -82,24 +187,75 @@ def make_record(rtype: int, payload: bytes) -> bytes:
     return _HDR.pack(rtype, len(payload), crc32(payload)) + payload
 
 
+def _parts_of(payload) -> list:
+    """Normalize a record payload to its iovec parts.  A payload may be a
+    single buffer or a list of buffers (e.g. ``[entry_header, key, value]``)
+    — multi-part payloads reach the kernel as separate iovec entries, so a
+    large value is never staged through a concatenation copy anywhere
+    between the caller and ``pwritev``."""
+    if isinstance(payload, (bytes, bytearray, memoryview)):
+        return [payload]
+    return list(payload)
+
+
+def payload_len(payload) -> int:
+    """Byte length of a (possibly multi-part) record payload."""
+    if isinstance(payload, (bytes, bytearray, memoryview)):
+        return len(payload)
+    return sum(len(p) for p in payload)
+
+
 @dataclass
 class WalConfig:
     segment_size: int = 4 * 1024 * 1024
     sync_interval_s: float = 0.05
     preallocate: bool = True
     background: bool = True       # run mapper/syncer threads
+    copy_threads: int = 1         # concurrent payload copiers per batch
+    # Runs below this size are never split across copiers: the pool
+    # dispatch would cost more than the memcpy it parallelizes.  1 MiB is
+    # the one default, configured per WalConfig (tests pass a tiny value
+    # to force multi-sub-run batches out of small records).
+    copy_split_bytes: int = 1 << 20
 
 
 class Wal:
     """Append-only segmented log with atomic position allocation."""
 
     def __init__(self, directory: str, name: str, config: WalConfig | None = None,
-                 metrics: Metrics | None = None):
+                 metrics: Metrics | None = None, *,
+                 copy_threads: Optional[int] = None,
+                 copy_pool: Optional[CopyPool] = None):
         self.dir = directory
         self.name = name
         self.cfg = config or WalConfig()
         self.metrics = metrics or Metrics()
         os.makedirs(directory, exist_ok=True)
+
+        # Payload-copier pool (reserve → parallel copy → commit).  A shared
+        # pool may be injected (``TideDB``/``ShardedTideDB`` do); otherwise
+        # the WAL owns one sized by ``copy_threads`` (kwarg wins over cfg).
+        if copy_pool is not None:
+            self._copy_pool, self._owns_copy_pool = copy_pool, False
+        else:
+            n = self.cfg.copy_threads if copy_threads is None else copy_threads
+            self._copy_pool, self._owns_copy_pool = CopyPool(n), True
+        # Test hook: called with the sub-run index before each copy; raising
+        # (or blocking) simulates a writer killed mid-batch for the
+        # crash-consistency fuzz and the flush-latch tests.
+        self.copy_fault: Optional[Callable[[int], None]] = None
+        # Completion latches for in-flight copies: opened under _alloc_lock
+        # at reservation, closed when the reservation's bytes are on (or
+        # past) the page cache.  flush() waits on every latch open at its
+        # start — the durability gate that keeps a sync-acknowledged record
+        # from sitting above an unwritten hole at fsync time.
+        self._inflight_lock = threading.Lock()
+        self._inflight: dict[int, threading.Event] = {}
+        self._inflight_seq = 0
+        # Poison headers that could not be written after a failed copy
+        # (see _copy_subrun): flush() must drain this before fsyncing or
+        # raise — sync durability is never acknowledged over a hole.
+        self._poison_backlog: list[tuple[int, int, bytes]] = []
 
         self._alloc_lock = threading.Lock()
         self._fd_lock = threading.Lock()
@@ -175,6 +331,88 @@ class Wal:
             pos = nxt
         return pos
 
+    # ------------------------------------------------------ copy latches
+    def _latch_open(self) -> tuple[int, threading.Event]:
+        """Register an in-flight copy; called under ``_alloc_lock`` so any
+        ``flush()`` that starts after our reservation is visible (i.e. any
+        flush whose fsync could cover acknowledged data above our hole)
+        is guaranteed to see — and wait on — this latch."""
+        ev = threading.Event()
+        with self._inflight_lock:
+            self._inflight_seq += 1
+            token = self._inflight_seq
+            self._inflight[token] = ev
+        return token, ev
+
+    def _latch_close(self, token: int, ev: threading.Event) -> None:
+        ev.set()
+        with self._inflight_lock:
+            self._inflight.pop(token, None)
+
+    def _repair_poison_backlog(self) -> None:
+        """Retry the poison-header writes a failed copy left behind;
+        raises ``OSError`` if any hole still cannot be repaired."""
+        with self._inflight_lock:
+            if not self._poison_backlog:
+                return
+            backlog, self._poison_backlog = self._poison_backlog, []
+        failed = []
+        for fd, pos, hdr in backlog:
+            try:
+                os.pwrite(fd, hdr, pos)
+            except OSError:
+                failed.append((fd, pos, hdr))
+        if failed:
+            with self._inflight_lock:
+                self._poison_backlog.extend(failed)
+            raise OSError(f"{len(failed)} unrepaired WAL hole(s): "
+                          "durability cannot be acknowledged")
+
+    def wait_copies(self) -> None:
+        """Block until every copy in flight at call time has completed (the
+        per-batch completion latch).  New reservations made after this call
+        starts are *not* waited for: their positions are above every record
+        already acknowledged, so they can never hide one on replay."""
+        with self._inflight_lock:
+            events = list(self._inflight.values())
+        for ev in events:
+            ev.wait()
+
+    def _copy_subrun(self, job) -> None:
+        """One copier's unit of work: assemble the sub-run's iovec — the
+        per-record CRC + header packing happens HERE, on the copier thread,
+        where ``zlib.crc32``'s GIL release lets checksums of different
+        sub-runs run in parallel — then issue a single vectored positional
+        write.  ``copy_fault`` (test hook) fires first so crash fuzz can
+        kill selected sub-runs before their bytes land.
+
+        If the copy fails with an I/O error (ENOSPC, EIO — the process is
+        still alive, unlike a crash), the sub-run's record *headers* are
+        re-written before the error propagates: each failed record then
+        replays as a torn payload (skipped by its header length) instead
+        of a zero hole that would truncate every later record in the
+        segment.  Headers that cannot be written either go onto a repair
+        backlog that ``flush()`` must drain before it may fsync — so a
+        later sync-acknowledged record can never sit above a hole that
+        replay would read as padding.  The caller sees the original
+        exception either way."""
+        idx, fd, off, nbytes, parts_fn, hdrs_fn = job
+        try:
+            if self.copy_fault is not None:
+                self.copy_fault(idx)
+            write_parts(fd, parts_fn(), off)
+        except OSError:
+            backlog = []
+            for rel, hdr in hdrs_fn():
+                try:
+                    os.pwrite(fd, hdr, off + rel)
+                except OSError:
+                    backlog.append((fd, off + rel, hdr))
+            if backlog:
+                with self._inflight_lock:
+                    self._poison_backlog.extend(backlog)
+            raise
+
     # ------------------------------------------------------------- appends
     def _pre_resolve_fd(self, rec_len: int) -> None:
         """Resolve (and possibly create + ftruncate) the segment fd this
@@ -200,51 +438,87 @@ class Wal:
 
     def append(self, rtype: int, payload: bytes, epoch: int = 0,
                app_bytes: Optional[int] = None) -> int:
-        """Append one record; returns its WAL position.
+        """Append one record; returns its WAL position — reserve → copy →
+        commit, the scalar instance of the lock-free write protocol.
+
+        The allocation lock covers only the reservation (tail bump, fd
+        resolution, dirty mark, epoch note, latch open); header AND payload
+        are copied outside it as one vectored write, so concurrent scalar
+        writers from independent threads overlap their copies (§3.1's
+        lock-free claim, not just the batched one).  Until the copy
+        completes the reservation is a hole of zeros; the completion latch
+        keeps ``flush()`` from fsync-acknowledging anything above it, and
+        crash replay reads the hole as padding (torn tail).
+
+        ``payload`` may be a single buffer or a list of buffers (e.g.
+        ``[entry_header, key, value]``); multi-part payloads go to the
+        kernel as separate iovec entries, never concatenated.  The CRC and
+        header are computed on this thread but outside the lock, so
+        concurrent scalar writers checksum in parallel too (``zlib.crc32``
+        releases the GIL).
 
         The caller must later call ``mark_processed(pos)`` once the index
         update for this record has been applied (write-flow step 4, §3.1).
         """
-        rec_len = HEADER_SIZE + len(payload)
+        parts = _parts_of(payload)
+        plen = sum(len(p) for p in parts)
+        rec_len = HEADER_SIZE + plen
         if rec_len > self.cfg.segment_size:
             raise ValueError(f"record of {rec_len} B exceeds segment size")
-        header = _HDR.pack(rtype, len(payload), crc32(payload))
         self._pre_resolve_fd(rec_len)
         with self._alloc_lock:
             pos = self._reserve(rec_len)
             seg = pos // self.cfg.segment_size
             fd = self._fd(seg, create=True)
-            os.pwrite(fd, header, pos % self.cfg.segment_size)
             if epoch or rtype in (T_ENTRY, T_TOMBSTONE, T_BATCH):
                 self._note_epoch(seg, epoch)
             with self._dirty_lock:
                 self._dirty_segments.add(seg)
-        # The large payload copy happens outside the allocation lock.
-        os.pwrite(fd, payload, pos % self.cfg.segment_size + HEADER_SIZE)
+            token, ev = self._latch_open()
+        try:
+            self._copy_subrun((
+                0, fd, pos % self.cfg.segment_size, rec_len,
+                lambda: [_HDR.pack(rtype, plen, crc32_parts(parts)), *parts],
+                lambda: [(0, _HDR.pack(rtype, plen, crc32_parts(parts)))]))
+        finally:
+            self._latch_close(token, ev)
         self.metrics.add(bytes_written_disk=rec_len, wal_appends=1,
                          bytes_written_app=app_bytes if app_bytes is not None else rec_len)
         return pos
 
     def append_many(self, records: list[tuple[int, bytes]], epoch: int = 0,
                     app_bytes: Optional[int] = None,
-                    epochs: Optional[list[int]] = None) -> list[int]:
-        """Append N independent records with ONE allocation-lock acquisition
-        (§3.1 vectorized: atomic allocation, batched parallel copy).
+                    epochs: Optional[list[int]] = None,
+                    parallel: Optional[bool] = None) -> list[int]:
+        """Append N independent records: ONE allocation-lock acquisition
+        reserves the whole batch, then the payload copies run in parallel
+        OUTSIDE the lock (§3.1: atomic allocation, parallel copy).
 
-        Headers and CRCs are assembled in a bulk pass *before* the lock is
-        taken, and the segment fds the batch will land in are pre-resolved
-        (file creation included) outside the critical section.  Inside the
-        lock, position arithmetic runs vectorized — segment rolls via
-        cumsum + searchsorted per touched segment, not a per-record branch
-        — producing positions byte-identical to N sequential ``append``
-        calls, and the records are written as contiguous same-segment runs
-        with a single ``pwrite`` per run instead of two syscalls per
-        record.  The run writes stay under the lock on purpose: releasing
-        it first would let a later writer be acknowledged durable
-        (``durability="sync"``) while this batch's bytes are still a hole
-        of zeros, which replay would read as padding — silently dropping
-        the acknowledged record after a crash.  Scalar ``append`` keeps
-        the same invariant by writing headers under the lock.
+        Only record *lengths* are needed before the lock (positions are
+        pure length arithmetic); the segment fds the batch will land in are
+        pre-resolved (file creation included) outside the critical section.
+        Inside the lock, position arithmetic runs vectorized — segment
+        rolls via cumsum + searchsorted per touched segment, not a
+        per-record branch — producing positions byte-identical to N
+        sequential ``append`` calls.  The lock then releases; the coalesced
+        same-segment runs are chopped into sub-runs (record-aligned,
+        ≥ ``copy_split_bytes`` each) and fanned across the copy pool.  Each
+        copier assembles its sub-run's headers — per-record CRCs are
+        computed *on the copier thread* (``zlib.crc32`` releases the GIL,
+        so checksumming parallelizes with the copies) — and issues one
+        ``pwritev`` whose iovec is the record parts themselves: payloads
+        may be multi-part (``[entry_header, key, value]``), and no staging
+        ``b"".join`` copy exists anywhere on the path.
+
+        Positions are returned only after every copy completes, so callers
+        index-apply and ``mark_processed`` only fully-written records.  A
+        completion latch (opened under the lock) makes ``flush()`` wait for
+        this batch, preserving the invariant the in-lock writes used to: a
+        later writer can never be acknowledged durable while this batch's
+        bytes are still a hole of zeros.  After a crash such a hole reads
+        as padding — replay drops that segment's suffix, exactly the torn
+        tail rule.  ``parallel=False`` keeps the copies on the calling
+        thread (still outside the lock); ``None`` uses the pool.
 
         Unlike ``append_batch`` this is NOT atomic: every record replays
         independently, exactly as if appended by N ``append`` calls, and a
@@ -266,13 +540,23 @@ class Wal:
         eps = (np.asarray(list(epochs), dtype=np.int64) if epochs is not None
                else np.full(len(records), epoch, dtype=np.int64))
         note = np.zeros(len(records), dtype=bool)
-        hdrs: list[bytes] = []
+        rec_parts: list[list] = []
+        plens: list[int] = []
         lens = np.empty(len(records), dtype=np.int64)
         for i, (rtype, payload) in enumerate(records):
-            rec_len = HEADER_SIZE + len(payload)
+            # Inlined _parts_of + payload_len: two function calls per
+            # record are measurable at small-value batch sizes.  Keep the
+            # accepted payload types in sync with _parts_of.
+            if isinstance(payload, (bytes, bytearray, memoryview)):
+                parts, plen = [payload], len(payload)
+            else:
+                parts = list(payload)
+                plen = sum(map(len, parts))
+            rec_len = HEADER_SIZE + plen
             if rec_len > seg_size:
                 raise ValueError(f"record of {rec_len} B exceeds segment size")
-            hdrs.append(_HDR.pack(rtype, len(payload), crc32(payload)))
+            rec_parts.append(parts)
+            plens.append(plen)
             lens[i] = rec_len
             note[i] = bool(eps[i]) or rtype in (T_ENTRY, T_TOMBSTONE, T_BATCH)
         cum = np.empty(len(records) + 1, dtype=np.int64)
@@ -290,7 +574,7 @@ class Wal:
             except OSError:
                 break
         positions = np.empty(len(records), dtype=np.int64)
-        runs = 0
+        run_bounds: list[tuple[int, int, int, int]] = []  # (start, i, j, fd)
         with self._alloc_lock:
             i, n = 0, len(records)
             while i < n:
@@ -305,16 +589,12 @@ class Wal:
                     self._tail += rem
                     continue
                 # One contiguous run: records i..j-1 land back to back in
-                # the current segment — a single coalesced pwrite.
+                # the current segment.
                 run_start = self._tail
-                parts: list[bytes] = []
                 for r in range(i, j):
                     positions[r] = run_start + int(cum[r] - cum[i])
-                    parts.append(hdrs[r])
-                    parts.append(records[r][1])
-                fd = self._fd(run_start // seg_size, create=True)
-                os.pwrite(fd, b"".join(parts), run_start % seg_size)
-                runs += 1
+                run_bounds.append((run_start, i, j,
+                                   self._fd(run_start // seg_size, create=True)))
                 self._tail += int(cum[j] - cum[i])
                 i = j
             rec_segs = positions // seg_size
@@ -326,30 +606,106 @@ class Wal:
                     self._note_epoch_range(int(s), int(e.min()), int(e.max()))
             with self._dirty_lock:
                 self._dirty_segments.update(int(s) for s in segs)
+            token, ev = self._latch_open()
+        # --- parallel copy, outside the allocation lock ---
+        use_pool = parallel is not False
+        subruns = self._plan_subruns(run_bounds, records, rec_parts, plens,
+                                     cum,
+                                     self._copy_pool.threads if use_pool else 1)
+        try:
+            if use_pool:
+                self._copy_pool.run(self._copy_subrun, subruns)
+            else:
+                for job in subruns:
+                    self._copy_subrun(job)
+        finally:
+            self._latch_close(token, ev)
         self.metrics.add(bytes_written_disk=total, wal_appends=len(records),
                          batched_write_records=len(records),
-                         batched_append_runs=runs,
+                         batched_append_runs=len(run_bounds),
+                         parallel_copy_subruns=len(subruns),
                          bytes_written_app=(app_bytes if app_bytes is not None
                                             else total))
         return positions.tolist()
 
+    def _plan_subruns(self, run_bounds, records, rec_parts, plens, cum,
+                      copiers: int) -> list:
+        """Chop each coalesced same-segment run into record-aligned
+        sub-runs of roughly ``run_bytes / copiers`` (never below
+        ``copy_split_bytes``) so one large run parallelizes across the
+        pool.  Each sub-run is (index, fd, segment_offset, nbytes,
+        parts_fn, hdrs_fn); ``parts_fn`` assembles the alternating
+        header/payload iovec on the copier thread — that is where the
+        per-record CRCs are computed, deliberately inside the parallel
+        region — and ``hdrs_fn`` yields (relative_offset, header) pairs
+        for the I/O-error poison pass."""
+        seg_size = self.cfg.segment_size
+        split = max(1, self.cfg.copy_split_bytes)
+        subruns: list = []
+
+        def builder(lo: int, hi: int):
+            def hdr_of(r: int) -> bytes:
+                parts = rec_parts[r]
+                crc = (crc32(parts[0]) if len(parts) == 1
+                       else crc32_parts(parts))
+                return _HDR.pack(records[r][0], plens[r], crc)
+
+            def build():
+                iov: list = []
+                for r in range(lo, hi):
+                    iov.append(hdr_of(r))
+                    iov.extend(rec_parts[r])
+                return iov
+
+            def hdrs():
+                base = int(cum[lo])
+                return [(int(cum[r]) - base, hdr_of(r))
+                        for r in range(lo, hi)]
+
+            return build, hdrs
+
+        for run_start, i, j, fd in run_bounds:
+            run_bytes = int(cum[j] - cum[i])
+            chunk = max(split, -(-run_bytes // max(1, copiers)))
+            r = i
+            while r < j:
+                sub_start = int(cum[r])
+                sub_pos = run_start + (sub_start - int(cum[i]))
+                e = r
+                while e < j and int(cum[e + 1]) - sub_start <= chunk:
+                    e += 1
+                if e == r:                 # single record larger than chunk
+                    e += 1
+                build, hdrs = builder(r, e)
+                subruns.append((len(subruns), fd, sub_pos % seg_size,
+                                int(cum[e]) - sub_start, build, hdrs))
+                r = e
+        return subruns
+
     def append_batch(self, subrecords: list[tuple[int, bytes]],
                      epoch: int = 0,
                      app_bytes: Optional[int] = None) -> tuple[int, list[int]]:
-        """Atomically append a batch (§3.1).  Returns (batch_pos, sub_positions)."""
-        # Interleaved header/payload parts joined once: no per-subrecord
-        # ``make_record`` intermediate concatenations.
-        parts: list[bytes] = []
+        """Atomically append a batch (§3.1).  Returns (batch_pos, sub_positions).
+
+        The outer BATCH payload is assembled as interleaved header/payload
+        *parts* (sub-payloads may themselves be multi-part) and handed to
+        ``append`` unjoined — the iovec carries them straight to the
+        kernel.  Sub-record CRCs are computed here (they live inside the
+        outer payload); the outer CRC rides the normal copy path."""
+        parts: list = []
+        sub_lens: list[int] = []
         for t, p in subrecords:
-            parts.append(_HDR.pack(t, len(p), crc32(p)))
-            parts.append(p)
-        body = b"".join(parts)
-        pos = self.append(T_BATCH, body, epoch=epoch, app_bytes=app_bytes)
+            sub = _parts_of(p)
+            plen = sum(len(x) for x in sub)
+            parts.append(_HDR.pack(t, plen, crc32_parts(sub)))
+            parts.extend(sub)
+            sub_lens.append(plen)
+        pos = self.append(T_BATCH, parts, epoch=epoch, app_bytes=app_bytes)
         sub_positions = []
         off = pos + HEADER_SIZE
-        for t, p in subrecords:
+        for plen in sub_lens:
             sub_positions.append(off)
-            off += HEADER_SIZE + len(p)
+            off += HEADER_SIZE + plen
         return pos, sub_positions
 
     def _reserve(self, rec_len: int) -> int:
@@ -612,7 +968,21 @@ class Wal:
 
     def flush(self) -> None:
         """Synchronous durability: fsync every dirty segment (explicit flush
-        for applications needing kernel-crash durability, §3.1)."""
+        for applications needing kernel-crash durability, §3.1).
+
+        Waits first for every payload copy in flight at entry (the
+        completion latch): an fsync must never acknowledge durability for
+        bytes that sit *above* a reserved-but-unwritten hole, or a crash
+        would replay the hole as padding and silently drop the acknowledged
+        record.  Copies reserved after this flush starts are not waited for
+        — their positions are above everything this flush can acknowledge.
+
+        Raises ``OSError`` if a failed copy's poison headers still cannot
+        be written (see ``_copy_subrun``): acknowledging durability over
+        an unrepaired hole would let crash replay read it as padding and
+        drop records above it."""
+        self.wait_copies()
+        self._repair_poison_backlog()
         # Clear marks *before* fsyncing: a concurrent append that re-dirties
         # a segment mid-flush re-adds its mark (an extra fsync later) rather
         # than having it lost to the post-fsync discard.
@@ -654,7 +1024,9 @@ class Wal:
         self._stop.set()
         for t in self._threads:
             t.join(timeout=5)
-        self.flush()
+        self.flush()                      # waits for in-flight copies too
+        if self._owns_copy_pool:
+            self._copy_pool.close()
         with self._fd_lock:
             for fd in self._fds.values():
                 os.close(fd)

@@ -16,9 +16,10 @@ discipline: each step drains a batch and serves it as maximal same-kind
 runs in arrival order — reads collapse into ``multi_get``/``multi_exists``
 calls (§3.2's 1.7×/15.6× wins at serving scale), writes collapse into
 batched ``put_many``/``delete_many`` calls (one WAL allocation-lock
-acquisition, coalesced pwrite runs; per-shard fan-out when the engine is
-sharded).  Run boundaries preserve scalar semantics: a read submitted
-after a write to the same key always observes it.
+acquisition, payload copies fanned across the engine's copier pool
+outside the lock; per-shard fan-out when the engine is sharded).  Run
+boundaries preserve scalar semantics: a read submitted after a write to
+the same key always observes it.
 """
 from __future__ import annotations
 
@@ -100,9 +101,15 @@ class KvBatchServer:
     Single-threaded step loop by design; submission is thread-safe.
     """
 
-    def __init__(self, db, *, max_batch: int = 256):
+    def __init__(self, db, *, max_batch: int = 256, write_opts=None):
         self.db = db
         self.max_batch = max_batch
+        # Per-stage write options (WriteOptions): carries the durability
+        # class and the parallel-copy routing knob into every retired write
+        # stage — a server over an engine configured with
+        # DbConfig.copy_threads=N fans each stage's payload copies across
+        # that engine's copier pool (shared store-wide when sharded).
+        self.write_opts = write_opts
         self._lock = threading.Lock()
         self.queue: collections.deque = collections.deque()
         self.batches_served = 0
@@ -232,7 +239,7 @@ class KvBatchServer:
                     wb.put(r.key, r.value, keyspace=r.keyspace)
                 else:
                     wb.delete(r.key, keyspace=r.keyspace)
-            positions = self.db.write_batch(wb)
+            positions = self.db.write_batch(wb, opts=self.write_opts)
             for r, pos in zip(reqs, positions):
                 r.pos = pos
         else:
@@ -246,10 +253,10 @@ class KvBatchServer:
             for (op, ks), group in groups.items():
                 if op == "put":
                     positions = put_many([(r.key, r.value) for r in group],
-                                         keyspace=ks)
+                                         keyspace=ks, opts=self.write_opts)
                 else:
                     positions = delete_many([r.key for r in group],
-                                            keyspace=ks)
+                                            keyspace=ks, opts=self.write_opts)
                 for r, pos in zip(group, positions):
                     r.pos = pos
         now = time.time()

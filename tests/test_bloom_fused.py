@@ -247,3 +247,94 @@ class TestCrashConsistency:
         with TideDB(tmpdir, cfg) as db2:
             assert db2.multi_exists(present) == want
             db2.close()
+
+
+class TestLazyBloomRebuild:
+    """ROADMAP item: filters are rebuilt only at flush time, so a freshly
+    reopened store answered cold ``exists`` through blob reads until the
+    first flush.  The first probe of a disk-resident, filterless cell now
+    rebuilds its filter lazily, restoring the filter fast-path immediately
+    after recovery."""
+
+    def _seed(self, d, n=80):
+        cfg = small_cfg(blob_cache_bytes=0)   # no memo: probes must use bloom
+        db = TideDB(d, cfg)
+        ks = keys_n(n, tag="lz")
+        for k in ks:
+            db.put(k, b"v-" + k[:4])
+        db.delete(ks[0])
+        db.snapshot_now(flush_threshold=1)    # index + blooms on disk
+        db.close()
+        return cfg, ks
+
+    def test_scalar_exists_rebuilds_and_short_circuits(self, tmpdir):
+        cfg, ks = self._seed(tmpdir)
+        db = TideDB(tmpdir, cfg)
+        assert all(c.bloom is None for _, c in db.table.all_cells())
+        miss = keys_n(1, tag="nope")[0]
+        assert db.exists(miss) is False       # first probe: rebuild fires
+        assert db.metrics.bloom_lazy_rebuilds >= 1
+        assert any(c.bloom is not None for _, c in db.table.all_cells())
+        before = db.metrics.index_lookups
+        neg_before = db.metrics.bloom_negative
+        assert db.exists(miss) is False       # second probe: filter only
+        assert db.metrics.index_lookups == before
+        assert db.metrics.bloom_negative > neg_before
+        # no false negatives: present keys answer True, the deleted one False
+        assert all(db.exists(k) for k in ks[1:10])
+        assert db.exists(ks[0]) is False
+        db.close()
+
+    def test_multi_exists_rebuilds_and_answers_correctly(self, tmpdir):
+        cfg, ks = self._seed(tmpdir)
+        db = TideDB(tmpdir, cfg)
+        miss = keys_n(40, tag="mm")
+        got = db.multi_exists(ks + miss)
+        assert got == [False] + [True] * (len(ks) - 1) + [False] * len(miss)
+        assert db.metrics.bloom_lazy_rebuilds >= 1
+        assert all(c.bloom is not None
+                   for _, c in db.table.all_cells() if c.has_disk())
+        # with every touched cell filtered (and no blob memo), a repeat
+        # all-miss batch is answered by the filters alone
+        blob_before = db.metrics.batched_blob_reads
+        neg_before = db.metrics.bloom_negative
+        assert db.multi_exists(miss) == [False] * len(miss)
+        assert db.metrics.batched_blob_reads == blob_before
+        assert db.metrics.bloom_negative >= neg_before + len(miss)
+        db.close()
+
+    def test_rebuilt_filter_matches_flush_built_filter(self, tmpdir):
+        """The lazily rebuilt filter must be bit-identical to the one the
+        flush built (same sizing, same live key set), so switching the
+        build site can never change an answer."""
+        cfg, ks = self._seed(tmpdir)
+        db = TideDB(tmpdir, cfg)
+        flush_blooms = {}
+        with TideDB(tmpdir + "-twin", cfg) as twin:
+            for k in ks:
+                twin.put(k, b"v-" + k[:4])
+            twin.delete(ks[0])
+            twin.snapshot_now(flush_threshold=1)
+            for _, cell in twin.table.all_cells():
+                if cell.bloom is not None:
+                    flush_blooms[cell.cell_id] = cell.bloom.bits.copy()
+        db.multi_exists(keys_n(30, tag="touch"))   # trigger lazy rebuilds
+        rebuilt = {cell.cell_id: cell.bloom.bits
+                   for _, cell in db.table.all_cells()
+                   if cell.bloom is not None}
+        assert rebuilt                        # something was rebuilt
+        for cid, bits in rebuilt.items():
+            assert (bits == flush_blooms[cid]).all()
+        db.close()
+
+    def test_writes_after_rebuild_reach_the_filter(self, tmpdir):
+        """Keys applied after the lazy install go through the normal
+        apply→bloom.add path: no false negatives for post-rebuild writes."""
+        cfg, ks = self._seed(tmpdir)
+        db = TideDB(tmpdir, cfg)
+        db.multi_exists(ks)                   # rebuild every touched cell
+        fresh = keys_n(30, tag="after")
+        db.put_many([(k, b"new") for k in fresh])
+        assert db.multi_exists(fresh) == [True] * len(fresh)
+        assert all(db.exists(k) for k in fresh)
+        db.close()

@@ -1,18 +1,23 @@
 """Vectorized write pipeline tests: ``append_many`` position/replay parity
-with the scalar path, crash-consistency fuzz (segment-straddling batches,
-torn-tail truncation mid-run), ``put_many``/``delete_many`` end-to-end
-recovery parity, and the batched serving write stages."""
+with the scalar path, the reserve → parallel copy → commit protocol
+(copies outside the allocation lock, the flush completion latch, killed
+copies on crash), crash-consistency fuzz (segment-straddling batches,
+torn-tail truncation mid-run, unwritten sub-run holes),
+``put_many``/``delete_many`` end-to-end recovery parity (including
+per-tombstone epochs), and the batched serving write stages."""
 import hashlib
 import os
 import shutil
 import tempfile
+import threading
 
 import pytest
 
 from repro.core.tidestore import (DbConfig, KeyspaceConfig, ShardedTideDB,
                                   TideDB, WriteOptions)
+from repro.core.tidestore import wal as wal_mod
 from repro.core.tidestore.wal import (HEADER_SIZE, T_ENTRY, T_TOMBSTONE, Wal,
-                                      WalConfig)
+                                      WalConfig, write_parts)
 
 from tests.hypothesis_compat import HealthCheck, given, settings, st
 
@@ -45,6 +50,14 @@ def tmpdir():
 
 def _wal(d, seg=SEG):
     return Wal(d, "v", WalConfig(segment_size=seg, background=False))
+
+
+def _pwal(d, seg=SEG, threads=3, split=32):
+    """A WAL with a real copier pool and a tiny split threshold, so even
+    tiny test batches fan out across multiple sub-runs."""
+    return Wal(d, "v", WalConfig(segment_size=seg, background=False,
+                                 copy_threads=threads,
+                                 copy_split_bytes=split))
 
 
 def _records(sizes):
@@ -168,6 +181,395 @@ class TestAppendMany:
         survived = [pos for pos, _, _ in w.iter_records()]
         assert survived == [p for p in positions if p != victim]
         w.close()
+
+
+# ----------------------------------------- reserve → parallel copy → commit
+class TestReserveCopyCommit:
+    def test_parallel_copy_parity_with_scalar(self, tmpdir):
+        """Pool-fanned sub-run copies must reproduce the scalar byte
+        stream exactly: positions, replay, and reopen all identical."""
+        recs = _records([0, 1, 100, 247, 30, 247, 5, 60, 200, 17] * 5)
+        w1 = _pwal(os.path.join(tmpdir, "a"))
+        w2 = _wal(os.path.join(tmpdir, "b"))
+        batched = w1.append_many(recs)
+        scalar = [w2.append(t, p) for t, p in recs]
+        assert batched == scalar
+        # the tiny split threshold must actually have split the runs
+        assert w1.metrics.parallel_copy_subruns > w1.metrics.batched_append_runs
+        assert list(w1.iter_records()) == list(w2.iter_records())
+        w1.close()
+        w2.close()
+        w1 = _wal(os.path.join(tmpdir, "a"))
+        assert [(t, p) for _, t, p in w1.iter_records()] == recs
+        w1.close()
+
+    def test_copies_run_outside_alloc_lock(self, tmpdir):
+        """The whole point of reserve-then-copy: during every payload copy
+        (batched sub-runs AND the scalar path) the allocation lock is
+        free, so concurrent writers can reserve while we copy."""
+        w = _pwal(tmpdir)
+        lock_free = []
+
+        def fault(idx):
+            ok = w._alloc_lock.acquire(timeout=5)
+            if ok:
+                w._alloc_lock.release()
+            lock_free.append(ok)
+
+        w.copy_fault = fault
+        w.append_many([(T_ENTRY, bytes(40))] * 20)
+        w.append(T_ENTRY, b"scalar-too")
+        assert lock_free and all(lock_free)
+        w.close()
+
+    def test_parallel_false_copies_inline(self, tmpdir):
+        """WriteOptions(parallel_copy=False) plumbing: the copies stay on
+        the calling thread (still outside the lock)."""
+        w = _pwal(tmpdir)
+        tids = set()
+        w.copy_fault = lambda idx: tids.add(threading.get_ident())
+        w.append_many([(T_ENTRY, bytes(40))] * 20, parallel=False)
+        assert tids == {threading.get_ident()}
+        w.copy_fault = None
+        w.close()
+
+    @pytest.mark.parametrize("kill", ["first", "middle", "last"])
+    def test_killed_subrun_drops_only_its_segment_suffix(self, tmpdir, kill):
+        """Crash-consistency for the parallel-copy path: kill one sub-run
+        mid-batch (fault-injection on the copier), reopen, and check only
+        fully-copied records are visible — the unwritten hole reads as
+        padding and drops exactly its segment's suffix, nothing else."""
+        recs = [(T_ENTRY, bytes([i]) * 40) for i in range(40)]
+        # Twin WAL: reservation is deterministic, so the twin's positions
+        # are the oracle for what the killed batch reserved.
+        twin = _pwal(os.path.join(tmpdir, "twin"))
+        positions = twin.append_many(recs)
+        twin.close()
+        target = {"first": positions[0],
+                  "middle": positions[len(recs) // 2],
+                  "last": positions[-1]}[kill]
+
+        w = _pwal(os.path.join(tmpdir, "w"))
+        holes = []
+        orig = w._copy_subrun
+
+        def spy(job):
+            idx, fd, off, nbytes = job[:4]
+            with w._fd_lock:
+                seg = next(s for s, f in w._fds.items() if f == fd)
+            lo = seg * SEG + off
+            hi = lo + nbytes
+            if lo <= target < hi:
+                holes.append((lo, hi))
+                # non-OSError: a killed process writes nothing — the
+                # poison-header repair must NOT fire for crash simulation
+                raise RuntimeError("copier killed mid-batch")
+            orig(job)
+
+        w._copy_subrun = spy
+        with pytest.raises(RuntimeError):
+            w.append_many(recs)
+        assert holes, "the targeted sub-run never ran"
+        del w._copy_subrun
+        w.close()
+
+        w = _wal(os.path.join(tmpdir, "w"))
+        survived = list(w.iter_records())
+        # Replay oracle: a record is visible iff no unwritten hole starts
+        # at or before it within its own segment (the zero header reads as
+        # padding and the rest of that segment is dropped).
+        expected = [p for p in positions if not any(
+            lo // SEG == p // SEG and lo <= p for lo, _ in holes)]
+        assert [pos for pos, _, _ in survived] == expected
+        by_pos = dict(zip(positions, recs))
+        for pos, rtype, payload in survived:     # survivors are byte-exact
+            assert (rtype, payload) == by_pos[pos]
+        w.close()
+
+    def test_io_error_poisons_headers_instead_of_hole(self, tmpdir):
+        """An OSError mid-copy (ENOSPC/EIO — process alive, unlike a
+        crash) must not leave a segment-truncating zero hole: the failed
+        sub-run's record headers are re-written best-effort, so its
+        records replay as torn payloads (skipped individually) and every
+        OTHER record — including same-segment records *after* the failure
+        — survives."""
+        recs = [(T_ENTRY, bytes([i]) * 40) for i in range(40)]
+        twin = _pwal(os.path.join(tmpdir, "twin"))
+        positions = twin.append_many(recs)
+        twin.close()
+        target = positions[len(recs) // 2]
+
+        w = _pwal(os.path.join(tmpdir, "w"))
+        failed, kill = [], set()
+        orig = w._copy_subrun
+
+        def spy(job):
+            idx, fd, off, nbytes = job[:4]
+            with w._fd_lock:
+                seg = next(s for s, f in w._fds.items() if f == fd)
+            lo = seg * SEG + off
+            if lo <= target < lo + nbytes:
+                failed.append((lo, lo + nbytes))
+                kill.add(idx)
+            orig(job)          # the real method: its repair path must run
+
+        def fault(idx):
+            if idx in kill:
+                raise OSError("disk full mid-copy")
+
+        w._copy_subrun = spy
+        w.copy_fault = fault
+        with pytest.raises(OSError):
+            w.append_many(recs)
+        assert failed
+        del w._copy_subrun
+        w.copy_fault = None
+        w.close()
+
+        w = _wal(os.path.join(tmpdir, "w"))
+        survived = [pos for pos, _, _ in w.iter_records()]
+        lo, hi = failed[0]
+        assert survived == [p for p in positions if not lo <= p < hi]
+        w.close()
+
+    def test_unrepairable_hole_blocks_flush_until_repaired(self, tmpdir,
+                                                           monkeypatch):
+        """If even the poison-header writes fail, the hole goes onto a
+        repair backlog and flush() must refuse to acknowledge durability
+        until it drains — then the failed records replay as torn payloads
+        and the WAL stays usable."""
+        w = _pwal(tmpdir)
+        real_pwrite = os.pwrite
+        dead = {"on": False}
+
+        def fake_pwrite(fd, data, offset):
+            if dead["on"]:
+                raise OSError("dead disk")
+            return real_pwrite(fd, data, offset)
+
+        def fault(idx):
+            raise OSError("io error mid-copy")
+
+        w.copy_fault = fault
+        monkeypatch.setattr("repro.core.tidestore.wal.os.pwrite", fake_pwrite)
+        dead["on"] = True
+        with pytest.raises(OSError):
+            # non-zero payloads: a zero payload would be byte-identical to
+            # the preallocated hole and legitimately replay as written
+            w.append_many([(T_ENTRY, bytes([i + 1]) * 40) for i in range(5)])
+        w.copy_fault = None
+        with pytest.raises(OSError):
+            w.flush()                   # hole unrepaired: refuse durability
+        dead["on"] = False
+        w.flush()                       # backlog drains: headers poisoned
+        assert list(w.iter_records()) == []   # torn payloads, skipped
+        pos = w.append(T_ENTRY, b"alive-after-repair")
+        assert [p for p, _, _ in w.iter_records()] == [pos]
+        w.close()
+
+    def test_flush_waits_for_inflight_copies(self, tmpdir):
+        """The durability gate: a sync flush issued while an earlier
+        batch's copies are still in flight must not return (and so must
+        not acknowledge durability for any later record) until those
+        copies complete — otherwise a crash could replay the earlier hole
+        as padding and drop the acknowledged record."""
+        w = _pwal(tmpdir, seg=16 * 1024, threads=2, split=64)
+        gate, entered = threading.Event(), threading.Event()
+        state = {"armed": True}
+
+        def fault(idx):
+            if idx == 0 and state["armed"]:
+                state["armed"] = False
+                entered.set()
+                assert gate.wait(timeout=10)
+
+        w.copy_fault = fault
+        appender = threading.Thread(
+            target=lambda: w.append_many([(T_ENTRY, bytes(100))] * 8))
+        appender.start()
+        assert entered.wait(timeout=10)      # batch reserved, copy stalled
+        pos = w.append(T_ENTRY, b"sync-me")  # later writer, higher position
+        done = threading.Event()
+        flusher = threading.Thread(target=lambda: (w.flush(), done.set()))
+        flusher.start()
+        assert not done.wait(timeout=0.3)    # latch holds the fsync back
+        gate.set()
+        assert done.wait(timeout=10)
+        appender.join(timeout=10)
+        flusher.join(timeout=10)
+        replayed = list(w.iter_records())
+        assert len(replayed) == 9            # batch of 8 + the scalar record
+        assert pos in [p for p, _, _ in replayed]
+        w.copy_fault = None
+        w.close()
+
+
+class TestPwritevFallback:
+    def test_fallback_path_parity(self, tmpdir, monkeypatch):
+        """Platforms without ``os.pwritev`` take the staged single-pwrite
+        shim; bytes must be identical, and a WAL written by one branch
+        must reopen cleanly under the other."""
+        monkeypatch.setattr(wal_mod, "HAVE_PWRITEV", False)
+        recs = _records([60, 247, 0, 13, 200, 88, 247, 1] * 4)
+        w1 = _pwal(os.path.join(tmpdir, "a"))
+        w2 = _wal(os.path.join(tmpdir, "b"))
+        assert w1.append_many(recs) == [w2.append(t, p) for t, p in recs]
+        assert list(w1.iter_records()) == list(w2.iter_records())
+        w1.close()
+        w2.close()
+        monkeypatch.undo()                   # reopen under the real branch
+        w1 = _wal(os.path.join(tmpdir, "a"))
+        assert [(t, p) for _, t, p in w1.iter_records()] == recs
+        w1.close()
+
+    @pytest.mark.parametrize("have_pwritev", [True, False])
+    def test_write_parts_both_branches(self, tmpdir, monkeypatch,
+                                       have_pwritev):
+        monkeypatch.setattr(wal_mod, "HAVE_PWRITEV", have_pwritev)
+        parts = [b"ab", b"", bytes(range(256)) * 5, b"z"]
+        path = os.path.join(tmpdir, f"wp-{have_pwritev}")
+        fd = os.open(path, os.O_RDWR | os.O_CREAT, 0o644)
+        try:
+            n = write_parts(fd, parts, 7)
+            assert n == sum(len(p) for p in parts)
+            assert os.pread(fd, n, 7) == b"".join(parts)
+        finally:
+            os.close(fd)
+
+    def test_write_parts_iov_max_chunking(self, tmpdir):
+        """More buffers than IOV_MAX in one call: the vectored path must
+        chunk and resume, producing the same bytes."""
+        parts = [bytes([i % 251]) * 3 for i in range(3000)]
+        path = os.path.join(tmpdir, "iov")
+        fd = os.open(path, os.O_RDWR | os.O_CREAT, 0o644)
+        try:
+            n = write_parts(fd, parts, 0)
+            assert n == sum(len(p) for p in parts)
+            assert os.pread(fd, n, 0) == b"".join(parts)
+        finally:
+            os.close(fd)
+
+
+class TestEngineParallelCopy:
+    def _cfg(self, **kw):
+        return small_cfg(
+            wal=WalConfig(segment_size=16 * 1024, background=False,
+                          copy_split_bytes=256),
+            copy_threads=3, **kw)
+
+    def test_put_many_parallel_recovers_to_scalar_map(self, tmpdir):
+        """End to end through TideDB with a real copier pool: positions
+        and the recovered key→position map match the scalar oracle."""
+        ks = keys_n(120, tag="pc")
+        d1, d2 = os.path.join(tmpdir, "a"), os.path.join(tmpdir, "b")
+        db1, db2 = TideDB(d1, self._cfg()), TideDB(d2, small_cfg())
+        p1 = db1.put_many([(k, b"v" * 200) for k in ks])
+        p2 = [db2.put(k, b"v" * 200) for k in ks]
+        assert p1 == p2
+        assert db1.metrics.parallel_copy_subruns >= \
+            db1.metrics.batched_append_runs
+        db1.close(flush=False)
+        db2.close(flush=False)
+        db1, db2 = TideDB(d1, self._cfg()), TideDB(d2, small_cfg())
+        for k in ks:
+            assert db1.table.get_position(0, k) == db2.table.get_position(0, k)
+            assert db1.get(k) == b"v" * 200
+        db1.close()
+        db2.close()
+
+    def test_sync_durability_with_pool_flushes_all(self, tmpdir):
+        with TideDB(tmpdir, self._cfg()) as db:
+            db.put_many([(k, bytes(500)) for k in keys_n(40, tag="sd")],
+                        opts=WriteOptions(durability="sync"))
+            assert not db.value_wal._dirty_segments
+
+    def test_parallel_copy_opt_out_stays_on_caller(self, tmpdir):
+        db = TideDB(tmpdir, self._cfg())
+        tids = set()
+        db.value_wal.copy_fault = lambda idx: tids.add(threading.get_ident())
+        db.put_many([(k, bytes(300)) for k in keys_n(30, tag="po")],
+                    opts=WriteOptions(parallel_copy=False))
+        assert tids == {threading.get_ident()}
+        db.value_wal.copy_fault = None
+        db.close()
+
+    def test_killed_copy_admits_only_written_records(self, tmpdir):
+        """Engine-level crash fuzz: a put_many whose copier dies mid-batch
+        raises, and after reopen exactly the fully-copied records are
+        visible — each with its correct value — never a torn one."""
+        ks = keys_n(60, tag="kc")
+        db = TideDB(os.path.join(tmpdir, "a"), self._cfg())
+        calls = {"n": 0}
+
+        def fault(idx):
+            calls["n"] += 1
+            if calls["n"] > 2:               # let two sub-runs land
+                raise RuntimeError("copier killed")
+
+        db.value_wal.copy_fault = fault
+        with pytest.raises(RuntimeError):
+            db.put_many([(k, b"x" * 300) for k in ks])
+        db.value_wal.copy_fault = None
+        db.close(flush=False)
+
+        db = TideDB(os.path.join(tmpdir, "a"), self._cfg())
+        wrote = {k: db.get(k) for k in ks}
+        seen = {v for v in wrote.values() if v is not None}
+        assert seen <= {b"x" * 300}          # visible ⇒ fully copied
+        assert any(v is None for v in wrote.values())  # the kill dropped some
+        db.close()
+
+
+class TestDeleteManyEpochs:
+    def test_matches_scalar_deletes(self, tmpdir):
+        """ROADMAP leftover: delete_many takes an aligned epochs= vector;
+        tombstone payload epochs and per-segment pruning ranges must be
+        identical to N scalar deletes."""
+        from repro.core.tidestore.wal import decode_tombstone
+        ks = keys_n(40, tag="de")
+        eps = [i // 8 + 1 for i in range(len(ks))]
+        cfg = small_cfg(wal=WalConfig(segment_size=1024, background=False))
+        d1, d2 = os.path.join(tmpdir, "a"), os.path.join(tmpdir, "b")
+        db1, db2 = TideDB(d1, cfg), TideDB(d2, cfg)
+        assert db1.delete_many(ks, epochs=eps) == \
+            [db2.delete(k, epoch=e) for k, e in zip(ks, eps)]
+        assert db1.value_wal.segment_epochs() == \
+            db2.value_wal.segment_epochs()
+        got = {key: epoch
+               for _, rtype, payload in db1.value_wal.iter_records()
+               if rtype == T_TOMBSTONE
+               for _, key, epoch in [decode_tombstone(payload)]}
+        assert got == dict(zip(ks, eps))
+        db1.close()
+        db2.close()
+
+    def test_misaligned_rejected_and_handle_spelling(self, tmpdir):
+        with TideDB(tmpdir, small_cfg()) as db:
+            with pytest.raises(ValueError):
+                db.delete_many(keys_n(3), epochs=[1])
+            h = db.keyspace("default")
+            h.delete_many(keys_n(5, tag="h"), epochs=[2] * 5)
+            assert 2 in {rng[1] for rng in
+                         db.value_wal.segment_epochs().values()}
+
+    def test_sharded_epochs_split_aligned_with_keys(self, tmpdir):
+        """The epochs vector splits per shard alongside its keys: every
+        shard's segment pruning ranges match the scalar oracle's."""
+        ks = keys_n(60, tag="sh")
+        eps = [(i % 4) + 1 for i in range(len(ks))]
+        with ShardedTideDB(os.path.join(tmpdir, "a"), small_cfg(),
+                           n_shards=3) as s1, \
+                ShardedTideDB(os.path.join(tmpdir, "b"), small_cfg(),
+                              n_shards=3) as s2:
+            s1.put_many([(k, b"x") for k in ks])
+            for k in ks:
+                s2.put(k, b"x")
+            assert s1.delete_many(ks, epochs=eps) == \
+                [s2.delete(k, epoch=e) for k, e in zip(ks, eps)]
+            for a, b in zip(s1.shards, s2.shards):
+                assert a.value_wal.segment_epochs() == \
+                    b.value_wal.segment_epochs()
+            assert s1.multi_exists(ks) == [False] * len(ks)
 
 
 # ----------------------------------------------------- engine-level writes
@@ -369,3 +771,22 @@ class TestServerWriteStages:
             srv.run_until_drained()
             assert db.metrics.batched_write_records == 50
             assert db.metrics.batched_append_runs >= 1
+
+    def test_write_opts_thread_through_every_stage_kind(self, tmpdir):
+        """The server's write_opts reach both retirement paths — the
+        put_many/delete_many groups AND the same-key write_batch fallback
+        — here observed via sync durability leaving nothing dirty."""
+        from repro.serving.engine import KvBatchServer
+        with TideDB(tmpdir, small_cfg()) as db:
+            srv = KvBatchServer(db, max_batch=64,
+                                write_opts=WriteOptions(durability="sync"))
+            ks = keys_n(20, tag="wo")
+            for i, k in enumerate(ks):
+                srv.submit_put(k, b"v%03d" % i)
+            # same key under both ops in one stage → write_batch fallback
+            srv.submit_put(ks[0], b"again")
+            srv.submit_delete(ks[0])
+            srv.run_until_drained()
+            assert srv.stats()["writes_served"] == len(ks) + 2
+            assert not db.value_wal._dirty_segments
+            assert db.get(ks[0]) is None
