@@ -33,3 +33,14 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kv_write --smoke-
 # per-cell dispatch path (real bar: >=2x at batch>=256 on >=16 cells,
 # checked by `python -m benchmarks.run --only kvexists`).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kv_exists --smoke
+
+# Reclamation smoke: under churn with live foreground traffic, segments
+# must actually drop, the final span must shrink vs the no-reclamation
+# baseline, and foreground put_many throughput must hold >= 0.8x of it
+# (best-of-2 per mode so one slow run on a loaded runner can't flake).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.relocation --smoke
+
+# Recovery smoke: correctness gates only (no timing) — reopen across a
+# pruned mid-log hole after a crash, and fall back to the rotated control
+# region when control.bin is torn.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.recovery --smoke

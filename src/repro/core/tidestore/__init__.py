@@ -1,12 +1,12 @@
 """Tidehunter storage engine — faithful host implementation (paper §3–§5)."""
-from .api import (Engine, KeyspaceHandle, ReadOptions, WriteBatch,
-                  WriteOptions)
+from .api import (Engine, KeyspaceHandle, PruneOptions, ReadOptions,
+                  WriteBatch, WriteOptions)
 from .cache import BlobArrayCache, LruCache
 from .db import DbConfig, TideDB
 from .index import (HeaderLookup, OptimisticLookup, serialize_header,
                     serialize_optimistic)
 from .large_table import CellState, KeyspaceConfig, LargeTable
-from .relocate import Decision, Relocator
+from .relocate import Decision, PruneController, PruneThread, Relocator
 from .shard import ShardedTideDB
 from .util import Metrics, PositionTracker
 from .wal import CopyPool, Wal, WalConfig
@@ -14,7 +14,8 @@ from .wal import CopyPool, Wal, WalConfig
 __all__ = [
     "TideDB", "ShardedTideDB", "DbConfig", "KeyspaceConfig", "CellState",
     "LargeTable", "Engine", "KeyspaceHandle", "WriteBatch", "ReadOptions",
-    "WriteOptions", "Wal", "WalConfig", "CopyPool", "Relocator", "Decision",
+    "WriteOptions", "PruneOptions", "Wal", "WalConfig", "CopyPool",
+    "Relocator", "PruneController", "PruneThread", "Decision",
     "Metrics", "PositionTracker", "LruCache", "BlobArrayCache",
     "OptimisticLookup", "HeaderLookup", "serialize_optimistic",
     "serialize_header",

@@ -82,8 +82,53 @@ class WriteOptions:
             raise ValueError(f"unknown durability class {self.durability!r}")
 
 
+@dataclass(frozen=True)
+class PruneOptions:
+    """Per-call space-reclamation behaviour (§4.4), the pruning analogue of
+    ``WriteOptions``.
+
+    - ``strategy``: ``"wal"`` (sequential scan of the oldest segments) or
+      ``"index"`` (iterate cells, read only below-cutoff values).
+    - ``reclaim_fraction``: fraction of the live WAL span one full pass
+      scans.
+    - ``space_amp_trigger``: a non-forced pass runs only when the physical
+      span ≥ trigger × estimated live bytes.
+    - ``min_reclaim_bytes``: never trigger below this span (keeps tiny
+      stores from churning).
+    - ``retain_epochs``: keep only the newest N epochs — segments whose
+      whole epoch range aged out drop for free, no bytes relocated; records
+      that aged out inside still-mixed segments are *retired* (tombstoned)
+      by the next relocation pass instead of being copied to the tail.
+      ``None`` disables the epoch trigger (explicit
+      ``prune_epochs_below`` still works).
+    - ``batch_records`` / ``batch_bytes``: harvest bounds per batched
+      re-append (one ``Wal.append_many`` — one allocation-lock acquisition,
+      one CopyPool fan-out — per batch).
+    """
+    strategy: str = "wal"
+    reclaim_fraction: float = 0.5
+    space_amp_trigger: float = 2.0
+    min_reclaim_bytes: int = 4 * 1024 * 1024
+    retain_epochs: Optional[int] = None
+    batch_records: int = 512
+    batch_bytes: int = 4 * 1024 * 1024
+
+    def __post_init__(self):
+        if self.strategy not in ("wal", "index"):
+            raise ValueError(f"unknown prune strategy {self.strategy!r}")
+        if not (0.0 < self.reclaim_fraction <= 1.0):
+            raise ValueError("reclaim_fraction must be in (0, 1]")
+        if self.space_amp_trigger < 1.0:
+            raise ValueError("space_amp_trigger must be >= 1.0")
+        if self.batch_records < 1 or self.batch_bytes < 1:
+            raise ValueError("batch bounds must be positive")
+        if self.retain_epochs is not None and self.retain_epochs < 1:
+            raise ValueError("retain_epochs must be >= 1 (or None)")
+
+
 READ_DEFAULTS = ReadOptions()
 WRITE_DEFAULTS = WriteOptions()
+PRUNE_DEFAULTS = PruneOptions()
 
 
 # ------------------------------------------------------------------ batches
@@ -205,6 +250,13 @@ class KeyspaceHandle:
         return self.engine.delete_many(keys, keyspace=self.name, opts=opts,
                                        epochs=epochs)
 
+    # maintenance
+    def prune(self, opts: Optional[PruneOptions] = None) -> dict:
+        """Run one reclamation pass.  Pruning is store-wide (the Value WAL
+        is shared across keyspaces); the handle spelling exists so serving
+        code holding only a handle can still schedule reclamation."""
+        return self.engine.prune(opts)
+
     def batch(self) -> WriteBatch:
         """A ``WriteBatch`` whose ops default to this keyspace."""
         return WriteBatch(default_keyspace=self.name)
@@ -258,6 +310,12 @@ class Engine(Protocol):
 
     def write_batch(self, ops,
                     opts: Optional[WriteOptions] = None) -> list: ...
+
+    def prune(self, opts: Optional["PruneOptions"] = None) -> dict: ...
+
+    def prune_step(self, opts: Optional["PruneOptions"] = None) -> int: ...
+
+    def prune_epochs_below(self, epoch: int) -> int: ...
 
     def min_live(self) -> int: ...
 

@@ -16,13 +16,13 @@ import threading
 from dataclasses import dataclass, field, replace
 from typing import Optional
 
-from .api import (KeyspaceHandle, ReadOptions, WriteBatch, WriteOptions,
-                  coerce_batch)
+from .api import (KeyspaceHandle, PruneOptions, ReadOptions, WriteBatch,
+                  WriteOptions, coerce_batch)
 from .cache import LruCache
 from .flush import Flusher
 from .index import TOMB_FLAG, is_tombstone, real_pos
 from .large_table import CellState, KeyspaceConfig, LargeTable
-from .relocate import Relocator, RelocatorThread
+from .relocate import PruneController, PruneThread, Relocator
 from .snapshot import (SnapshotThread, capture_state, read_control_region,
                        write_control_region)
 from .util import Metrics
@@ -38,6 +38,17 @@ from .wal import (_ENTRY_HDR, HEADER_SIZE, T_ENTRY, T_INDEX, T_TOMBSTONE,
 _STAGE_VALUE_MAX = 4096
 
 
+def clamp_copy_threads(requested: int, metrics: Optional[Metrics] = None) -> int:
+    """Cap copier threads at the machine's cores (oversubscribed copiers
+    only thrash); the shaved count lands in ``Metrics.copy_threads_clamped``
+    so config sweeps can see requested vs effective."""
+    cores = os.cpu_count() or 1
+    eff = max(1, min(requested, cores))
+    if metrics is not None and eff < requested:
+        metrics.add(copy_threads_clamped=requested - eff)
+    return eff
+
+
 @dataclass
 class DbConfig:
     keyspaces: list = field(default_factory=lambda: [KeyspaceConfig("default")])
@@ -48,14 +59,18 @@ class DbConfig:
     flusher_threads: int = 2
     snapshot_interval_s: float = 0.25
     background_snapshots: bool = True
-    relocation: bool = False               # background relocator thread
+    relocation: bool = False               # background prune thread
     relocation_interval_s: float = 1.0
+    prune: Optional["PruneOptions"] = None  # trigger policy; None = defaults
     mem_budget_entries: int = 2_000_000    # Large Table residency budget
     batched_kernels: bool = True           # route multi_get/multi_exists
                                            # through the Pallas kernel wrappers
     blob_cache_bytes: int = 8 * 1024 * 1024  # parsed index-blob memo budget
     copy_threads: int = 4                  # parallel payload copiers (§3.1);
                                            # 1 = inline copies, still lock-free
+    clamp_copy_threads: bool = True        # cap effective copiers at the
+                                           # machine's cores (tests opt out to
+                                           # exercise oversubscribed pools)
 
 
 class TideDB:
@@ -67,9 +82,19 @@ class TideDB:
         self.metrics = Metrics()
 
         # One copier pool shared by both WALs (an injected pool — e.g. from
-        # ShardedTideDB — is shared wider and owned by the injector).
-        self._copy_pool = copy_pool or CopyPool(self.cfg.copy_threads)
-        self._owns_copy_pool = copy_pool is None
+        # ShardedTideDB — is shared wider and owned by the injector).  The
+        # effective thread count is capped at the machine's cores: copiers
+        # beyond that only add context-switch overhead (BENCH_kvwrite ct8
+        # on the 2-core box), and the clamp is recorded in Metrics so a
+        # sweep can see the requested/effective gap.
+        if copy_pool is None:
+            eff = (clamp_copy_threads(self.cfg.copy_threads, self.metrics)
+                   if self.cfg.clamp_copy_threads else self.cfg.copy_threads)
+            self._copy_pool = CopyPool(eff)
+            self._owns_copy_pool = True
+        else:
+            self._copy_pool = copy_pool
+            self._owns_copy_pool = False
         self.value_wal = Wal(path, "value", self.cfg.wal, self.metrics,
                              copy_pool=self._copy_pool)
         self.index_wal = Wal(path, "index", self.cfg.index_wal, self.metrics,
@@ -80,7 +105,11 @@ class TideDB:
         self.cache = LruCache(self.cfg.cache_bytes)
         self.flusher = Flusher(self.table, self.index_wal, self.value_wal,
                                self.cfg.flusher_threads, self.metrics)
-        self.relocator = Relocator(self.table, self.value_wal, self.metrics)
+        prune_opts = self.cfg.prune or PruneOptions()
+        self.relocator = Relocator(self.table, self.value_wal, self.metrics,
+                                   batch_records=prune_opts.batch_records,
+                                   batch_bytes=prune_opts.batch_bytes)
+        self.prune_controller = PruneController(self.relocator, prune_opts)
         self._ks_by_name = self.table.by_name
         self._closed = False
 
@@ -90,11 +119,11 @@ class TideDB:
         if self.cfg.background_snapshots:
             self._snapshot_thread = SnapshotThread(self, self.cfg.snapshot_interval_s)
             self._snapshot_thread.start()
-        self._relocator_thread = None
+        self._prune_thread = None
         if self.cfg.relocation:
-            self._relocator_thread = RelocatorThread(
-                self.relocator, self.cfg.relocation_interval_s)
-            self._relocator_thread.start()
+            self._prune_thread = PruneThread(
+                self.prune_controller, self.cfg.relocation_interval_s)
+            self._prune_thread.start()
 
     # ------------------------------------------------------------- recovery
     def _recover(self) -> None:
@@ -109,7 +138,13 @@ class TideDB:
             self.index_wal.first_live_pos = max(self.index_wal.first_live_pos,
                                                 state["index_first_live"])
             for seg, rng in state.get("segment_epochs", {}).items():
-                self.value_wal._segment_epochs[int(seg)] = (rng[0], rng[1])
+                seg = int(seg)
+                # Segments pruned between the snapshot capture and this
+                # replay left holes: resurrecting their epoch ranges would
+                # re-offer already-deleted files to the pruner.
+                if self.value_wal.segment_missing(seg):
+                    continue
+                self.value_wal._segment_epochs[seg] = (rng[0], rng[1])
             for ks_id, cid, dpos, dlen, dcount, upto in state["cells"]:
                 ks = self.table.ks(ks_id)
                 if isinstance(cid, (bytes, bytearray)):
@@ -124,7 +159,11 @@ class TideDB:
                 cell.state = CellState.UNLOADED if dcount > 0 else CellState.EMPTY
             replay_from = max(replay_from, self.value_wal.first_live_pos)
 
-        # Replay the WAL suffix into the Large Table.
+        # Replay the WAL suffix into the Large Table.  Re-note per-segment
+        # epoch ranges as we go: records appended after the last snapshot
+        # have no range in the control region, and without one their
+        # segments could never be epoch-pruned.
+        seg_size = self.value_wal.cfg.segment_size
         for pos, rtype, payload in self.value_wal.iter_records(replay_from):
             if rtype == T_ENTRY:
                 ks_id, key, _value, epoch = decode_entry(payload)
@@ -134,6 +173,7 @@ class TideDB:
                 marker = TOMB_FLAG | pos
             else:
                 continue
+            self.value_wal._note_epoch(pos // seg_size, epoch)
             cell = self.table.ks(ks_id).cell_for_key(key)
             if pos < cell.flushed_upto:
                 continue                     # already covered by flushed index
@@ -376,7 +416,8 @@ class TideDB:
         self.metrics.add(cache_misses=1)
         for _attempt in range(2):           # retry once across concurrent GC
             pos = self.table.get_position(ks_id, key)
-            if pos is None or pos < min_live:
+            if pos is None or pos < min_live \
+                    or not self.value_wal.pos_live(pos):
                 return None                  # absent or epoch-pruned
             try:
                 rtype, payload = self.value_wal.read_record(pos)
@@ -398,7 +439,8 @@ class TideDB:
                 self.cache.get(self._cache_key(ks_id, key)) is not None:
             self.metrics.add(cache_hits=1)
             return True
-        return self.table.exists(ks_id, key, self._min_live(opts))
+        return self.table.exists(ks_id, key, self._min_live(opts),
+                                 pos_live=self.value_wal.pos_live)
 
     # -------------------------------------------------------- batched reads
     def multi_get(self, keys, keyspace=0,
@@ -441,8 +483,8 @@ class TideDB:
             if marker is None or is_tombstone(marker):
                 continue
             pos = real_pos(marker)
-            if pos < min_live:
-                continue                 # epoch-pruned
+            if pos < min_live or not self.value_wal.pos_live(pos):
+                continue                 # epoch-pruned (watermark or mid-log)
             want.setdefault(pos, []).append(i)
         records = self.value_wal.read_records_batch(want) if want else {}
         fills = []
@@ -496,9 +538,11 @@ class TideDB:
             ks_id, [keys[i] for i in miss_idx],
             use_kernel=self._use_kernel(opts))
         min_live = self._min_live(opts)
+        pos_live = self.value_wal.pos_live
         for i, marker in zip(miss_idx, markers):
             results[i] = (marker is not None and not is_tombstone(marker)
-                          and real_pos(marker) >= min_live)
+                          and real_pos(marker) >= min_live
+                          and pos_live(real_pos(marker)))
         return results
 
     def prev(self, key: bytes, keyspace=0) -> Optional[tuple[bytes, bytes]]:
@@ -553,12 +597,25 @@ class TideDB:
     def prune_epochs_below(self, epoch: int) -> int:
         return self.relocator.prune_epochs_below(epoch)
 
+    def prune(self, opts: Optional[PruneOptions] = None) -> dict:
+        """One forced reclamation pass (epoch expiry + relocation over
+        ``reclaim_fraction`` of the live span); returns its summary.
+        Relocation rides the batched write protocol and never blocks
+        ``flush()`` acknowledgement — concurrent writers keep flowing."""
+        return self.prune_controller.prune_once(opts)
+
+    def prune_step(self, opts: Optional[PruneOptions] = None) -> int:
+        """One bounded, trigger-respecting reclamation slice (at most one
+        harvest batch); the unit ``KvBatchServer`` interleaves between
+        serving stages.  Returns records scanned (0 = nothing to do)."""
+        return self.prune_controller.step(opts)
+
     def close(self, flush: bool = True) -> None:
         if self._closed:
             return
         self._closed = True
-        if self._relocator_thread:
-            self._relocator_thread.stop()
+        if self._prune_thread:
+            self._prune_thread.stop()
         if self._snapshot_thread:
             self._snapshot_thread.stop()
         if flush:

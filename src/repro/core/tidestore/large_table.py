@@ -265,6 +265,52 @@ class LargeTable:
                 cell.state = CellState.DIRTY_LOADED
             return True
 
+    def compare_and_set_many(self, items) -> list[bool]:
+        """Batched relocation CAS (§4.4): ``items`` is a list of
+        (ks_id, key, expect_pos, new_marker).  Returns one success flag per
+        item, aligned with the input.
+
+        Grouped per cell like ``apply_many`` — each touched cell takes its
+        row lock ONCE for its whole group and the global mem-budget counter
+        bumps once per batch — but the conflict rule is strictly CAS, never
+        higher-position-wins: a relocated copy sits at the WAL tail yet
+        carries the *old* value, so it must lose to any concurrent write
+        that moved the key off the captured position."""
+        items = list(items)
+        groups: dict[tuple[int, object], tuple[Cell, list]] = {}
+        for idx, (ks_id, key, expect_pos, new_marker) in enumerate(items):
+            cell = self.ks(ks_id).cell_for_key(key)
+            ent = groups.get((ks_id, cell.cell_id))
+            if ent is None:
+                ent = groups[(ks_id, cell.cell_id)] = (cell, [])
+            ent[1].append((idx, key, expect_pos, new_marker))
+        out = [False] * len(items)
+        mem_delta = 0
+        for (ks_id, cid), (cell, group) in groups.items():
+            ks = self.ks(ks_id)
+            with ks.row_lock(cid):
+                cell_changed = 0
+                for idx, key, expect_pos, new_marker in group:
+                    cur, _ = self._position_locked(ks, cell, key)
+                    if cur is None or real_pos(cur) != expect_pos:
+                        continue
+                    if cell.mem.get(key) is None:
+                        mem_delta += 1
+                    cell.mem[key] = new_marker
+                    p = real_pos(new_marker)
+                    if cell.min_dirty_pos is None or p < cell.min_dirty_pos:
+                        cell.min_dirty_pos = p
+                    out[idx] = True
+                    cell_changed += 1
+                if cell_changed:
+                    if cell.state == CellState.UNLOADED:
+                        cell.state = CellState.DIRTY_UNLOADED
+                    elif cell.state in (CellState.LOADED, CellState.EMPTY):
+                        cell.state = CellState.DIRTY_LOADED
+        if mem_delta:
+            self._bump_mem(mem_delta)
+        return out
+
     # ---------------------------------------------------------------- reads
     def _bounded_pread(self, base: int, lim: int):
         """Index Store pread clamped to the blob at [base, base + lim):
@@ -350,12 +396,18 @@ class LargeTable:
             return None
         return real_pos(marker)
 
-    def exists(self, ks_id: int, key: bytes, min_live_pos: int = 0) -> bool:
+    def exists(self, ks_id: int, key: bytes, min_live_pos: int = 0,
+               pos_live=None) -> bool:
         """Existence check resolved entirely from index state (§3.2) —
         never touches the Value WAL.  This is the 15.6× operation.  The
         Bloom gate routes through the same ``probe_cells`` arithmetic as
         the fused batch path (single-query numpy fast path), so scalar and
-        batched answers can never diverge."""
+        batched answers can never diverge.
+
+        ``pos_live`` (optional ``pos -> bool``, typically
+        ``Wal.pos_live``) screens positions inside mid-log segments dropped
+        by epoch pruning: the watermark check alone cannot see those holes
+        because this path never touches the WAL."""
         ks = self.ks(ks_id)
         cell = ks.cell_for_key(key, create=False)
         if cell is None:
@@ -368,7 +420,10 @@ class LargeTable:
             marker, _ = self._position_locked(ks, cell, key)
         if marker is None or is_tombstone(marker):
             return False
-        return real_pos(marker) >= min_live_pos
+        p = real_pos(marker)
+        if p < min_live_pos:
+            return False
+        return pos_live is None or pos_live(p)
 
     # -------------------------------------------------------- batched reads
     def _fused_bloom_pass(self, ks: Keyspace, probe, out, use_kernel) -> list:

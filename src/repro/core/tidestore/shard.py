@@ -32,9 +32,9 @@ import zlib
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
-from .api import (KeyspaceHandle, ReadOptions, WriteBatch, WriteOptions,
-                  coerce_batch)
-from .db import DbConfig, TideDB
+from .api import (KeyspaceHandle, PruneOptions, ReadOptions, WriteBatch,
+                  WriteOptions, coerce_batch)
+from .db import DbConfig, TideDB, clamp_copy_threads
 from .wal import CopyPool
 
 
@@ -74,12 +74,22 @@ class ShardedTideDB:
         # copies stay bounded at cfg.copy_threads for the whole store, not
         # N shards × M copiers (each shard's fan-out thread additionally
         # copies its own first sub-run, so per-shard writes still overlap).
-        self._copy_pool = CopyPool(self.cfg.copy_threads)
+        # The same pool serves per-shard relocation batches, so reclamation
+        # concurrency is bounded store-wide too.
+        self._copy_pool = CopyPool(
+            clamp_copy_threads(self.cfg.copy_threads)
+            if self.cfg.clamp_copy_threads else self.cfg.copy_threads)
         self.shards = [TideDB(os.path.join(path, f"shard-{i:02d}"), shard_cfg,
                               copy_pool=self._copy_pool)
                        for i in range(n_shards)]
+        # The clamp happened before any shard metrics existed; record it
+        # once (shard 0) so the summed stats() surface shows the gap.
+        shaved = self.cfg.copy_threads - self._copy_pool.threads
+        if shaved > 0:
+            self.shards[0].metrics.add(copy_threads_clamped=shaved)
         self._pool = ThreadPoolExecutor(max_workers=threads or n_shards,
                                         thread_name_prefix="tide-shard")
+        self._prune_rr = 0
         self._closed = False
 
     # ------------------------------------------------------------- routing
@@ -271,6 +281,30 @@ class ShardedTideDB:
 
     def prune_epochs_below(self, epoch: int) -> int:
         return sum(sh.prune_epochs_below(epoch) for sh in self.shards)
+
+    def prune(self, opts: Optional[PruneOptions] = None) -> dict:
+        """One forced reclamation pass on every shard, fanned across the
+        pool.  Each shard's relocation batches re-append through its own
+        WAL but share the store-wide CopyPool.  Counters sum across shards;
+        ``space_amp`` reports the worst shard."""
+        futures = [self._pool.submit(sh.prune, opts) for sh in self.shards]
+        out: dict = {}
+        for f in futures:
+            for k, v in f.result().items():
+                if k == "space_amp":
+                    out[k] = max(out.get(k, 0.0), v)
+                elif k == "triggered":
+                    out[k] = out.get(k, False) or v
+                else:
+                    out[k] = out.get(k, 0) + v
+        return out
+
+    def prune_step(self, opts: Optional[PruneOptions] = None) -> int:
+        """One bounded reclamation slice, round-robined across shards so a
+        serving loop's per-stage budget stays one harvest batch."""
+        sid = self._prune_rr % self.n_shards
+        self._prune_rr += 1
+        return self.shards[sid].prune_step(opts)
 
     def clear_caches(self) -> None:
         """Benchmark/test hook: drop every shard's value LRU."""

@@ -21,6 +21,7 @@ from .util import Metrics, crc32
 from .wal import Wal
 
 CONTROL_FILE = "control.bin"
+CONTROL_FALLBACK = CONTROL_FILE + ".1"
 _MAGIC = b"TIDE0001"
 
 
@@ -35,11 +36,21 @@ def write_control_region(path: str, state: dict) -> None:
         f.write(blob)
         f.flush()
         os.fsync(f.fileno())
-    os.replace(tmp, os.path.join(path, CONTROL_FILE))
+    cur = os.path.join(path, CONTROL_FILE)
+    # Rotate the previous snapshot aside before installing the new one:
+    # should this write land torn (kernel crash mid-rename aside, a torn
+    # file can also mean media corruption), recovery falls back to the
+    # previous snapshot.  Snapshots hold only positions, so an older one
+    # merely lengthens replay — it never loses acknowledged data.
+    if os.path.exists(cur):
+        try:
+            os.replace(cur, os.path.join(path, CONTROL_FALLBACK))
+        except OSError:
+            pass
+    os.replace(tmp, cur)
 
 
-def read_control_region(path: str) -> Optional[dict]:
-    fn = os.path.join(path, CONTROL_FILE)
+def _read_one(fn: str) -> Optional[dict]:
     if not os.path.exists(fn):
         return None
     with open(fn, "rb") as f:
@@ -51,6 +62,16 @@ def read_control_region(path: str) -> Optional[dict]:
     if crc32(body) != crc:
         return None
     return msgpack.unpackb(body, raw=False, strict_map_key=False)
+
+
+def read_control_region(path: str) -> Optional[dict]:
+    """Current control region, or the rotated previous one if the current
+    file is missing/torn/corrupt (CRC gate).  ``None`` = full replay."""
+    for fn in (CONTROL_FILE, CONTROL_FALLBACK):
+        state = _read_one(os.path.join(path, fn))
+        if state is not None:
+            return state
+    return None
 
 
 def capture_state(table: LargeTable, value_wal: Wal, index_wal: Wal) -> dict:

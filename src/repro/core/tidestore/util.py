@@ -109,9 +109,13 @@ class Metrics:
     parallel_copy_subruns: int = 0     # pwritev sub-runs issued by append_many
     cache_hits: int = 0
     cache_misses: int = 0
+    copy_threads_clamped: int = 0      # requested − effective CopyPool threads
     relocated_entries: int = 0
     relocated_bytes: int = 0
+    relocation_batches: int = 0        # append_many batches issued by relocation
+    relocation_cas_fail: int = 0       # relocations lost to a concurrent write
     segments_deleted: int = 0
+    segments_pruned: int = 0           # whole segments dropped by epoch expiry
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def add(self, **kwargs: int) -> None:

@@ -274,11 +274,23 @@ class Wal:
         self._segment_epochs: dict[int, tuple[int, int]] = {}
         self._epoch_lock = threading.Lock()
 
+        # Segments epoch-pruned out of the middle of the live span
+        # (drop_segments): their positions read as absent via pos_live and
+        # replay skips the holes.  On reopen the set is inferred from the
+        # gaps between the surviving segment files.
+        self._dropped_segments: set[int] = set()
+        # fds retired by GC/pruning await close here for one mapper cycle;
+        # guarded by its own lock since droppers and the mapper both touch it.
+        self._grave_lock = threading.Lock()
+        self._fd_graveyard: list[int] = []
+
         existing = self._scan_segments()
         self.first_live_pos = (min(existing) * self.cfg.segment_size) if existing else 0
         self._tail = (max(existing) * self.cfg.segment_size) if existing else 0
         if existing:
             self._tail = self._recover_tail(max(existing))
+            self._dropped_segments = \
+                set(range(min(existing), max(existing) + 1)) - set(existing)
         self.tracker.reset(self._tail)
 
         self._stop = threading.Event()
@@ -868,6 +880,13 @@ class Wal:
                 continue
             hdr = self._pread_raw(pos, HEADER_SIZE)
             if len(hdr) < HEADER_SIZE:
+                # Short read mid-log: the segment file was dropped by epoch
+                # pruning (possibly between the snapshot this replay started
+                # from and now).  Skip the hole, not the whole suffix.
+                seg = pos // seg_size
+                if self.segment_missing(seg) and (seg + 1) * seg_size < tail:
+                    pos = (seg + 1) * seg_size
+                    continue
                 break
             rtype, length, crc = _HDR.unpack(hdr)
             if rtype == T_PAD:
@@ -919,22 +938,24 @@ class Wal:
         # Close fds unlinked on a *previous* cycle: in-flight preads holding
         # an old index/value pointer keep working across the unlink (POSIX),
         # and the deferred close removes the read-after-close race.
-        graveyard = getattr(self, "_fd_graveyard", [])
+        with self._grave_lock:
+            graveyard, self._fd_graveyard = self._fd_graveyard, []
         for fd in graveyard:
             try:
                 os.close(fd)
             except OSError:
                 pass
-        self._fd_graveyard: list[int] = []
 
         first_seg = self.first_live_pos // self.cfg.segment_size
         with self._fd_lock:
-            dead = [i for i in self._fds if i < first_seg]
+            dead = [i for i in self._fds
+                    if i < first_seg or i in self._dropped_segments]
         for i in sorted(dead):
             with self._fd_lock:
                 fd = self._fds.pop(i, None)
             if fd is not None:
-                self._fd_graveyard.append(fd)
+                with self._grave_lock:
+                    self._fd_graveyard.append(fd)
             try:
                 os.unlink(self._segment_path(i))
                 self.metrics.add(segments_deleted=1)
@@ -942,6 +963,11 @@ class Wal:
                 pass
             with self._epoch_lock:
                 self._segment_epochs.pop(i, None)
+        # Dropped segments that sank below the watermark need no further
+        # pos_live screening — the first_live_pos check subsumes them.
+        if self._dropped_segments:
+            self._dropped_segments = \
+                {s for s in self._dropped_segments if s >= first_seg}
 
     def advance_gc_watermark(self, pos: int) -> None:
         """Files entirely below ``pos`` may be deleted (§4.4, file-granular GC)."""
@@ -1007,18 +1033,70 @@ class Wal:
 
     def segments_expired_below_epoch(self, epoch: int) -> list[int]:
         """Whole segments whose max epoch < ``epoch`` — droppable without
-        relocating a single byte (the paper's epoch-based pruning)."""
+        relocating a single byte (the paper's epoch-based pruning).
+
+        Expired segments anywhere in the live span qualify, not just a
+        prefix: ``drop_segments`` supports mid-log holes, so an old-epoch
+        segment sandwiched between newer ones is reclaimed immediately
+        instead of waiting for relocation to clear everything below it.
+        Segments with no recorded epoch range (e.g. ranges lost to a crash
+        before the next control-region snapshot) are never dropped."""
         first_seg = self.first_live_pos // self.cfg.segment_size
         tail_seg = self.tail // self.cfg.segment_size
         out = []
         with self._epoch_lock:
             for seg in range(first_seg, tail_seg):
+                if seg in self._dropped_segments:
+                    continue
                 rng = self._segment_epochs.get(seg)
                 if rng is not None and rng[1] < epoch:
                     out.append(seg)
-                else:
-                    break  # prefix property: stop at first live segment
         return out
+
+    def pos_live(self, pos: int) -> bool:
+        """False for positions reclaimed by GC or epoch pruning: below the
+        file-granular watermark, or inside a dropped mid-log segment."""
+        if pos < self.first_live_pos:
+            return False
+        return not self._dropped_segments or \
+            pos // self.cfg.segment_size not in self._dropped_segments
+
+    def segment_missing(self, seg: int) -> bool:
+        """True when ``seg``'s file no longer exists (GC'd or dropped)."""
+        if seg < self.first_live_pos // self.cfg.segment_size:
+            return True
+        return seg in self._dropped_segments
+
+    def drop_segments(self, segs) -> int:
+        """Unlink whole expired segments (§4.4 epoch pruning), mid-log drops
+        included.  Zero bytes relocated: readers observe the hole through
+        ``pos_live`` and replay skips it.  fds are retired through the
+        mapper graveyard (deferred close), so an in-flight pread racing the
+        drop still reads the unlinked file instead of a closed fd."""
+        seg_size = self.cfg.segment_size
+        tail_seg = self.tail // seg_size
+        dropped = 0
+        for s in sorted(segs):
+            if s >= tail_seg:
+                continue                   # never the open tail segment
+            self._dropped_segments.add(s)
+            try:
+                os.unlink(self._segment_path(s))
+                self.metrics.add(segments_deleted=1)
+            except FileNotFoundError:
+                pass
+            with self._epoch_lock:
+                self._segment_epochs.pop(s, None)
+            dropped += 1
+        with self._dirty_lock:
+            self._dirty_segments.difference_update(self._dropped_segments)
+        # Fold a dropped prefix into the watermark so file-granular GC (and
+        # the pos_live fast path) see the simplest possible live span.
+        first = self.first_live_pos // seg_size
+        while first < tail_seg and first in self._dropped_segments:
+            first += 1
+        self.advance_gc_watermark(first * seg_size)
+        return dropped
 
     def close(self) -> None:
         self._stop.set()
@@ -1031,7 +1109,9 @@ class Wal:
             for fd in self._fds.values():
                 os.close(fd)
             self._fds.clear()
-        for fd in getattr(self, "_fd_graveyard", []):
+        with self._grave_lock:
+            graveyard, self._fd_graveyard = self._fd_graveyard, []
+        for fd in graveyard:
             try:
                 os.close(fd)
             except OSError:

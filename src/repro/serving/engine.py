@@ -101,7 +101,8 @@ class KvBatchServer:
     Single-threaded step loop by design; submission is thread-safe.
     """
 
-    def __init__(self, db, *, max_batch: int = 256, write_opts=None):
+    def __init__(self, db, *, max_batch: int = 256, write_opts=None,
+                 prune_opts=None):
         self.db = db
         self.max_batch = max_batch
         # Per-stage write options (WriteOptions): carries the durability
@@ -110,6 +111,17 @@ class KvBatchServer:
         # DbConfig.copy_threads=N fans each stage's payload copies across
         # that engine's copier pool (shared store-wide when sharded).
         self.write_opts = write_opts
+        # Pruning rides the serving loop: when prune_opts is set (and the
+        # engine exposes prune_step), one bounded relocation slice runs
+        # after every served stage and on every idle step() — reclamation
+        # progresses between serving stages instead of stalling them, and
+        # idle servers converge toward the space-amp target for free.
+        # Engines without prune_step (e.g. the LSM baseline) disable this.
+        self.prune_opts = prune_opts
+        self._prune_step = (getattr(db, "prune_step", None)
+                            if prune_opts is not None else None)
+        self.prune_steps = 0
+        self.prune_scanned = 0
         self._lock = threading.Lock()
         self.queue: collections.deque = collections.deque()
         self.batches_served = 0
@@ -161,6 +173,7 @@ class KvBatchServer:
             take = [self.queue.popleft()
                     for _ in range(min(self.max_batch, len(self.queue)))]
         if not take:
+            self._maybe_prune()          # idle steps still make progress
             return 0
         # Conflict keys normalize the keyspace (engines accept an index or
         # a name for the same keyspace; both spellings must collide here).
@@ -189,7 +202,20 @@ class KvBatchServer:
         for is_write, ops, _ in stages:
             served += (self._serve_writes(ops) if is_write
                        else self._serve_reads(ops))
+            # One bounded relocation slice between serving stages: the
+            # slice scans at most PruneOptions.batch_records WAL records
+            # and re-appends survivors through one append_many, so a stage
+            # of foreground traffic is never starved by reclamation.
+            self._maybe_prune()
         return served
+
+    def _maybe_prune(self) -> None:
+        if self._prune_step is None:
+            return
+        scanned = self._prune_step(self.prune_opts)
+        if scanned:
+            self.prune_steps += 1
+            self.prune_scanned += scanned
 
     def _serve_reads(self, reqs: list) -> int:
         # One multi-call per (op, keyspace) group present in the run.
@@ -294,6 +320,8 @@ class KvBatchServer:
                 "mean_batch": ((self.keys_served + self.writes_served)
                                / self.batches_served
                                if self.batches_served else 0.0),
+                "prune_steps": self.prune_steps,
+                "prune_scanned": self.prune_scanned,
                 "queued": queued}
 
 

@@ -452,10 +452,12 @@ class TestPwritevFallback:
 
 class TestEngineParallelCopy:
     def _cfg(self, **kw):
+        # clamp_copy_threads=False: these tests exercise a genuinely
+        # multi-threaded copier pool regardless of the host's core count.
         return small_cfg(
             wal=WalConfig(segment_size=16 * 1024, background=False,
                           copy_split_bytes=256),
-            copy_threads=3, **kw)
+            copy_threads=3, clamp_copy_threads=False, **kw)
 
     def test_put_many_parallel_recovers_to_scalar_map(self, tmpdir):
         """End to end through TideDB with a real copier pool: positions
