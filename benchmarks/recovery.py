@@ -2,9 +2,31 @@
 
 More frequent snapshots shrink the WAL suffix that must be replayed; the
 Control Region stays tiny because it stores positions, not index data.
+
+Emits ``BENCH_recovery.json`` so cold-start cost records across PRs.
+Schema (``recovery/v1``)::
+
+    {
+      "schema": "recovery/v1",
+      "engine": "tidehunter",
+      "n_keys": 20000,
+      "results": [
+        {"case": "snapshot_sweep", "snap_every": 1250,   # 0 = never
+         "recovery_s": 0.31, "control_region_bytes": 412},
+        {"case": "filter_probe", "persist_filters": true,
+         "reopen_s": 0.02, "probe_s": 0.004,
+         "filters_loaded": 18, "filters_rebuilt": 0},
+        ...
+      ]
+    }
+
+The ``filter_probe`` rows time the persisted-Bloom fast path: reopen plus
+a cold miss-probe with filters persisted at flush vs lazily rebuilt from
+the index blobs — the cost the T_FILTER record exists to delete.
 """
 from __future__ import annotations
 
+import json
 import os
 import shutil
 import tempfile
@@ -34,7 +56,59 @@ def _prune_cfg():
     return cfg
 
 
-def run(n_keys: int = 20000, value_size: int = 256, csv=print) -> None:
+def _filter_cfg(persist: bool):
+    cfg = _cfg()
+    cfg.keyspaces = [KeyspaceConfig("default", n_cells=64,
+                                    dirty_flush_threshold=64)]
+    cfg.persist_filters = persist
+    cfg.blob_cache_bytes = 0
+    return cfg
+
+
+def run_filter_probe(n_keys: int = 8000, value_size: int = 256, csv=print,
+                     results: list | None = None) -> dict:
+    """Persisted-filter fast path: reopen + cold miss-probe with filters
+    persisted at flush vs lazily rebuilt from index blobs.  Returns
+    ``{persist: (reopen_s, probe_s)}``."""
+    keys = gen_keys(n_keys, seed=17)
+    misses = gen_keys(n_keys // 4, seed=18)
+    v = bytes(value_size)
+    out: dict = {}
+    for persist in (True, False):
+        d = tempfile.mkdtemp(prefix="bench-recovery-filters-")
+        try:
+            db = TideDB(d, _filter_cfg(persist))
+            db.put_many([(k, v) for k in keys])
+            db.snapshot_now(flush_threshold=1)
+            db.close()
+            t0 = time.perf_counter()
+            db2 = TideDB(d, _filter_cfg(persist))
+            reopen_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            assert not any(db2.multi_exists(misses))
+            probe_s = time.perf_counter() - t0
+            loaded = db2.metrics.bloom_filters_loaded
+            rebuilt = db2.metrics.bloom_lazy_rebuilds
+            db2.close()
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+        out[persist] = (reopen_s, probe_s)
+        if results is not None:
+            results.append({"case": "filter_probe",
+                            "persist_filters": persist,
+                            "reopen_s": reopen_s, "probe_s": probe_s,
+                            "filters_loaded": loaded,
+                            "filters_rebuilt": rebuilt})
+        tag = "persisted" if persist else "rebuilt"
+        csv(f"recovery.filters_{tag},{probe_s*1e6:.0f},"
+            f"probe {probe_s*1e3:.1f} ms reopen {reopen_s*1e3:.1f} ms "
+            f"(loaded={loaded} rebuilt={rebuilt})")
+    return out
+
+
+def run(n_keys: int = 20000, value_size: int = 256, csv=print,
+        json_path: str | None = "BENCH_recovery.json") -> None:
+    results: list[dict] = []
     keys = gen_keys(n_keys, seed=11)
     for snap_every in (0, n_keys // 4, n_keys // 16):
         d = tempfile.mkdtemp(prefix="bench-recovery-")
@@ -55,8 +129,19 @@ def run(n_keys: int = 20000, value_size: int = 256, csv=print) -> None:
         label = f"snap_every_{snap_every or 'never'}"
         csv(f"recovery.{label},{recovery_s*1e6:.0f},"
             f"{recovery_s*1e3:.1f} ms control_region={ctrl_bytes}B")
+        results.append({"case": "snapshot_sweep", "snap_every": snap_every,
+                        "recovery_s": recovery_s,
+                        "control_region_bytes": ctrl_bytes})
         db2.close()
         shutil.rmtree(d, ignore_errors=True)
+
+    run_filter_probe(csv=csv, results=results)
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"schema": "recovery/v1", "engine": "tidehunter",
+                       "n_keys": n_keys, "results": results}, f, indent=1)
+        csv(f"recovery.json,0,{json_path}")
 
 
 def run_smoke(csv=print) -> bool:

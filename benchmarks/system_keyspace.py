@@ -1,0 +1,134 @@
+"""System-keyspace suite: what does self-observation cost, and is it right?
+
+The ``__system`` keyspace (top-N large values, hot cells, per-keyspace
+rollups) is populated from the hot put/read paths through sampled,
+lock-free counters — the design bet is that observation is nearly free.
+This suite prices that bet: put and multi_get throughput with
+``system_stats`` on (default sampling), on with ``sample=1`` (every key
+attributed — the worst case), and off, plus the cost of one ``fold()``
+per snapshot.
+
+``--smoke`` is the CI gate and checks correctness, not timing: the
+``large_values`` table must match an independently computed top-N oracle
+exactly, survive a crash-reopen, and the observation overhead path must
+not disturb user reads.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+from repro.core.tidestore import DbConfig, KeyspaceConfig, TideDB
+from repro.core.tidestore.wal import WalConfig
+
+from .engines import gen_keys
+
+
+def _cfg(**kw):
+    defaults = dict(
+        keyspaces=[KeyspaceConfig("default", n_cells=64,
+                                  dirty_flush_threshold=100000)],
+        wal=WalConfig(segment_size=8 * 1024 * 1024, background=False),
+        index_wal=WalConfig(segment_size=32 * 1024 * 1024, background=False),
+        background_snapshots=False,
+    )
+    defaults.update(kw)
+    return DbConfig(**defaults)
+
+
+def _time_workload(cfg, keys, value, batch=256):
+    d = tempfile.mkdtemp(prefix="bench-system-")
+    try:
+        db = TideDB(d, cfg)
+        t0 = time.perf_counter()
+        for off in range(0, len(keys), batch):
+            db.put_many([(k, value) for k in keys[off:off + batch]])
+        put_dt = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for off in range(0, len(keys), batch):
+            db.multi_get(keys[off:off + batch])
+        get_dt = time.perf_counter() - t0
+        fold_dt = 0.0
+        if db.system is not None:
+            t0 = time.perf_counter()
+            db.system.fold()
+            fold_dt = time.perf_counter() - t0
+        db.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    return put_dt, get_dt, fold_dt
+
+
+def run(n_keys: int = 16384, value_size: int = 256, csv=print) -> dict:
+    keys = gen_keys(n_keys, seed=29)
+    value = bytes(value_size)
+    cases = [("off", _cfg(system_stats=False)),
+             ("sampled", _cfg()),
+             ("sample1", _cfg(system_sample=1))]
+    out: dict = {}
+    base_put = base_get = None
+    for name, cfg in cases:
+        put_dt, get_dt, fold_dt = _time_workload(cfg, keys, value)
+        out[name] = (put_dt, get_dt, fold_dt)
+        if name == "off":
+            base_put, base_get = put_dt, get_dt
+        put_oh = (put_dt / base_put - 1) * 100 if base_put else 0.0
+        get_oh = (get_dt / base_get - 1) * 100 if base_get else 0.0
+        csv(f"system.put.{name},{put_dt/n_keys*1e6:.2f},"
+            f"{n_keys/put_dt:.0f} ops/s ({put_oh:+.1f}% vs off)")
+        csv(f"system.get.{name},{get_dt/n_keys*1e6:.2f},"
+            f"{n_keys/get_dt:.0f} ops/s ({get_oh:+.1f}% vs off)")
+        if name != "off":
+            csv(f"system.fold.{name},{fold_dt*1e6:.0f},"
+                f"{fold_dt*1e3:.2f} ms per fold")
+    return out
+
+
+def run_smoke(csv=print) -> bool:
+    """CI gates: (a) ``large_values`` matches an independent top-N oracle;
+    (b) the tables survive a crash-reopen (fold + snapshot, close without
+    flush); (c) user reads are undisturbed by observation."""
+    keys = gen_keys(600, seed=31)
+    sizes = [64 + ((i * 7919) % 4096) for i in range(len(keys))]
+    d = tempfile.mkdtemp(prefix="bench-system-smoke-")
+    ok = True
+    try:
+        cfg = _cfg(system_top_n=8)
+        db = TideDB(d, cfg)
+        db.put_many([(k, b"x" * s) for k, s in zip(keys, sizes)])
+        want = sorted(zip(keys, sizes), key=lambda kv: (-kv[1], kv[0]))[:8]
+        got = [(r["key"], r["size"])
+               for r in db.system_tables()["large_values"]["default"]]
+        oracle_ok = got == want
+        ok &= oracle_ok
+        db.snapshot_now()
+        db.close(flush=False)                  # crash
+        db2 = TideDB(d, cfg)
+        t = db2.system_tables()
+        reopen_ok = (t["keyspace_stats"]["default"]["puts"] == len(keys)
+                     and [(r["key"], r["size"])
+                          for r in t["large_values"]["default"]] == want)
+        ok &= reopen_ok
+        reads_ok = all(db2.get(k) == b"x" * s
+                       for k, s in zip(keys[:50], sizes[:50]))
+        ok &= reads_ok
+        db2.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    csv(f"system.smoke,0,{'ok' if ok else 'FAIL'} "
+        f"(oracle={oracle_ok} reopen={reopen_ok} reads={reads_ok})")
+    return bool(ok)
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="top-N oracle parity + crash-reopen survival gates")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(0 if run_smoke() else 1)
+    run()

@@ -44,3 +44,15 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.relocation --smok
 # pruned mid-log hole after a crash, and fall back to the rotated control
 # region when control.bin is torn.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.recovery --smoke
+
+# Overload smoke: under 4x sustained overload the admission controller must
+# keep queue depth and accounted cost at/below the watermark while the
+# admitted stream keeps being served, the no-admission baseline must be
+# visibly unbounded, and backpressure must lose zero requests.  Correctness
+# shapes, not timing (the 0.8x goodput bar is the full benchmark's gate).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.overload --smoke
+
+# System-keyspace smoke: the __system large_values table must match an
+# independently computed top-N oracle, survive a crash-reopen, and leave
+# user reads undisturbed.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.system_keyspace --smoke

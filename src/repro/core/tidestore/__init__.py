@@ -8,6 +8,9 @@ from .index import (HeaderLookup, OptimisticLookup, serialize_header,
 from .large_table import CellState, KeyspaceConfig, LargeTable
 from .relocate import Decision, PruneController, PruneThread, Relocator
 from .shard import ShardedTideDB
+from .system import (SYSTEM_KEYSPACE, CopierGovernor, StatsCollector,
+                     decode_row_key, read_tables, row_key,
+                     system_keyspace_config)
 from .util import Metrics, PositionTracker
 from .wal import CopyPool, Wal, WalConfig
 
@@ -19,4 +22,6 @@ __all__ = [
     "Metrics", "PositionTracker", "LruCache", "BlobArrayCache",
     "OptimisticLookup", "HeaderLookup", "serialize_optimistic",
     "serialize_header",
+    "SYSTEM_KEYSPACE", "StatsCollector", "CopierGovernor", "read_tables",
+    "row_key", "decode_row_key", "system_keyspace_config",
 ]

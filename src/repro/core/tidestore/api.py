@@ -228,6 +228,27 @@ class KeyspaceHandle:
     def prev(self, key: bytes):
         return self.engine.prev(key, keyspace=self.name)
 
+    def scan_prefix(self, prefix: bytes, limit: Optional[int] = None) -> list:
+        """All (key, value) pairs whose key starts with ``prefix``,
+        ascending, built from repeated ``prev`` steps walking down from the
+        prefix's upper bound (the reverse-iterator read op is the engine's
+        only ordered primitive).  ``limit`` bounds the result count,
+        keeping the LAST ``limit`` pairs in key order (the walk is
+        highest-key-first).  The __system tables read through this."""
+        pad = 64          # probe must compare above any real key suffix
+        probe = prefix + b"\xff" * pad
+        out: list = []
+        while True:
+            got = self.engine.prev(probe, keyspace=self.name)
+            if got is None or not got[0].startswith(prefix):
+                break
+            out.append(got)
+            if limit is not None and len(out) >= limit:
+                break
+            probe = got[0]
+        out.reverse()
+        return out
+
     # writes
     def put(self, key: bytes, value: bytes,
             opts: Optional[WriteOptions] = None) -> int:
@@ -322,5 +343,7 @@ class Engine(Protocol):
     def flush(self) -> None: ...
 
     def stats(self) -> dict: ...
+
+    def system_tables(self) -> dict: ...
 
     def close(self, flush: bool = True) -> None: ...

@@ -18,6 +18,7 @@ threshold) instead of one dispatch per cell.
 from __future__ import annotations
 
 import hashlib
+import struct
 
 import numpy as np
 
@@ -115,6 +116,35 @@ class BloomFilter:
     @property
     def nbytes(self) -> int:
         return self.bits.nbytes
+
+    # ------------------------------------------------------- serialization
+    # Persisted next to the index blob at flush (T_FILTER records in the
+    # Index Store) so reopen can skip the lazy rebuild's blob read.  The
+    # wire form is the in-memory layout verbatim — (nbits, k) header + the
+    # little-endian uint32 word array — so a round-trip is bit-identical
+    # to the filter that was flushed.
+    _WIRE_HDR = struct.Struct("<QI")     # nbits u64, k u32
+
+    def to_bytes(self) -> bytes:
+        return self._WIRE_HDR.pack(self.nbits, self.k) + \
+            self.bits.astype("<u4", copy=False).tobytes()
+
+    @classmethod
+    def from_bytes(cls, raw: bytes) -> "BloomFilter":
+        hdr = cls._WIRE_HDR.size
+        if len(raw) < hdr:
+            raise ValueError("truncated bloom filter blob")
+        nbits, k = cls._WIRE_HDR.unpack_from(raw)
+        nwords = (nbits + 31) // 32
+        if nbits <= 0 or (nbits & (nbits - 1)) or k < 1 or \
+                len(raw) != hdr + nwords * 4:
+            raise ValueError("malformed bloom filter blob")
+        f = cls.__new__(cls)
+        f.nbits = nbits
+        f.k = k
+        f.bits = np.frombuffer(raw, dtype="<u4", offset=hdr).astype(
+            np.uint32, copy=True)
+        return f
 
 
 def _probe_host(h1: np.ndarray, h2: np.ndarray, off: np.ndarray,

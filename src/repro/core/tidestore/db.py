@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import os
 import threading
+from contextlib import contextmanager
 from dataclasses import dataclass, field, replace
 from typing import Optional
 
@@ -25,6 +26,8 @@ from .large_table import CellState, KeyspaceConfig, LargeTable
 from .relocate import PruneController, PruneThread, Relocator
 from .snapshot import (SnapshotThread, capture_state, read_control_region,
                        write_control_region)
+from .system import (SYSTEM_KEYSPACE, CopierGovernor, StatsCollector,
+                     read_tables, system_keyspace_config)
 from .util import Metrics
 from .wal import (_ENTRY_HDR, HEADER_SIZE, T_ENTRY, T_INDEX, T_TOMBSTONE,
                   CopyPool, Wal, WalConfig, decode_entry, decode_tombstone,
@@ -66,11 +69,26 @@ class DbConfig:
     batched_kernels: bool = True           # route multi_get/multi_exists
                                            # through the Pallas kernel wrappers
     blob_cache_bytes: int = 8 * 1024 * 1024  # parsed index-blob memo budget
-    copy_threads: int = 4                  # parallel payload copiers (§3.1);
-                                           # 1 = inline copies, still lock-free
-    clamp_copy_threads: bool = True        # cap effective copiers at the
-                                           # machine's cores (tests opt out to
-                                           # exercise oversubscribed pools)
+    copy_threads: Optional[int] = None     # parallel payload copiers (§3.1);
+                                           # None = adaptive (pool sized to
+                                           # the host's core budget and
+                                           # retuned from observed load by a
+                                           # CopierGovernor); an int pins the
+                                           # count (1 = inline copies, still
+                                           # lock-free)
+    clamp_copy_threads: bool = True        # cap an explicit copy_threads at
+                                           # the machine's cores (tests opt
+                                           # out to exercise oversubscribed
+                                           # pools); adaptive pools are
+                                           # always core-capped
+    persist_filters: bool = True           # write each flush's Bloom filter
+                                           # next to its index blob so reopen
+                                           # loads it instead of rebuilding
+    system_stats: bool = True              # observe the workload into the
+                                           # reserved __system keyspace (the
+                                           # keyspace itself always exists)
+    system_top_n: int = 8                  # rows per __system ranking table
+    system_sample: int = 8                 # 1-in-N read-traffic sampling
 
 
 class TideDB:
@@ -81,16 +99,38 @@ class TideDB:
         os.makedirs(path, exist_ok=True)
         self.metrics = Metrics()
 
+        # The reserved __system keyspace (self-observation tables) rides at
+        # the END of the user's keyspace list so user ks_ids are stable, and
+        # it ALWAYS exists — even with system_stats=False — so WAL replay of
+        # system rows written under a previous configuration never dangles.
+        for ks_cfg in self.cfg.keyspaces:
+            if ks_cfg.name == SYSTEM_KEYSPACE:
+                raise ValueError(
+                    f"keyspace name {SYSTEM_KEYSPACE!r} is reserved for the "
+                    f"engine's system tables")
+        all_keyspaces = list(self.cfg.keyspaces) + [system_keyspace_config()]
+        self._system_ks_id = len(all_keyspaces) - 1
+        self._system_writes = threading.local()
+
         # One copier pool shared by both WALs (an injected pool — e.g. from
-        # ShardedTideDB — is shared wider and owned by the injector).  The
-        # effective thread count is capped at the machine's cores: copiers
-        # beyond that only add context-switch overhead (BENCH_kvwrite ct8
-        # on the 2-core box), and the clamp is recorded in Metrics so a
-        # sweep can see the requested/effective gap.
+        # ShardedTideDB — is shared wider and owned by the injector).  With
+        # copy_threads=None (the default) the pool is adaptive: sized to the
+        # host's core budget and retuned from observed load by a
+        # CopierGovernor on every snapshot tick.  An explicit int pins the
+        # count, capped at the machine's cores unless clamp_copy_threads is
+        # off: copiers beyond the cores only add context-switch overhead
+        # (BENCH_kvwrite ct8 on the 2-core box), and the clamp is recorded
+        # in Metrics so a sweep can see the requested/effective gap.
         if copy_pool is None:
-            eff = (clamp_copy_threads(self.cfg.copy_threads, self.metrics)
-                   if self.cfg.clamp_copy_threads else self.cfg.copy_threads)
-            self._copy_pool = CopyPool(eff)
+            if self.cfg.copy_threads is None:
+                self._copy_pool = CopyPool(None)
+                self._copy_pool.governor = CopierGovernor(self._copy_pool,
+                                                          self.metrics)
+            else:
+                eff = (clamp_copy_threads(self.cfg.copy_threads, self.metrics)
+                       if self.cfg.clamp_copy_threads
+                       else self.cfg.copy_threads)
+                self._copy_pool = CopyPool(eff)
             self._owns_copy_pool = True
         else:
             self._copy_pool = copy_pool
@@ -99,12 +139,13 @@ class TideDB:
                              copy_pool=self._copy_pool)
         self.index_wal = Wal(path, "index", self.cfg.index_wal, self.metrics,
                              copy_pool=self._copy_pool)
-        self.table = LargeTable(self.cfg.keyspaces, self.index_wal.pread,
+        self.table = LargeTable(all_keyspaces, self.index_wal.pread,
                                 self.metrics,
                                 blob_cache_bytes=self.cfg.blob_cache_bytes)
         self.cache = LruCache(self.cfg.cache_bytes)
         self.flusher = Flusher(self.table, self.index_wal, self.value_wal,
-                               self.cfg.flusher_threads, self.metrics)
+                               self.cfg.flusher_threads, self.metrics,
+                               persist_filters=self.cfg.persist_filters)
         prune_opts = self.cfg.prune or PruneOptions()
         self.relocator = Relocator(self.table, self.value_wal, self.metrics,
                                    batch_records=prune_opts.batch_records,
@@ -114,6 +155,16 @@ class TideDB:
         self._closed = False
 
         self._recover()
+
+        # The workload observer folds into __system on snapshot ticks;
+        # load() re-seeds its rollups from the persisted tables so stats
+        # accumulate across reopens instead of restarting from zero.
+        self.system: Optional[StatsCollector] = None
+        if self.cfg.system_stats:
+            self.system = StatsCollector(self, top_n=self.cfg.system_top_n,
+                                         sample=self.cfg.system_sample)
+            self.flusher.collector = self.system
+            self.system.load()
 
         self._snapshot_thread = None
         if self.cfg.background_snapshots:
@@ -145,7 +196,13 @@ class TideDB:
                 if self.value_wal.segment_missing(seg):
                     continue
                 self.value_wal._segment_epochs[seg] = (rng[0], rng[1])
-            for ks_id, cid, dpos, dlen, dcount, upto in state["cells"]:
+            for entry in state["cells"]:
+                # Seed snapshots carry 6-tuples; newer ones append the
+                # persisted-Bloom pointer (filter_pos, filter_len).  An old
+                # control region simply rebuilds filters lazily.
+                ks_id, cid, dpos, dlen, dcount, upto = entry[:6]
+                if ks_id >= len(self.table.keyspaces):
+                    continue                 # keyspace no longer configured
                 ks = self.table.ks(ks_id)
                 if isinstance(cid, (bytes, bytearray)):
                     cell = ks.cell_for_key(bytes(cid))
@@ -155,6 +212,8 @@ class TideDB:
                     continue
                 cell.disk_pos, cell.disk_len, cell.disk_count = dpos, dlen, dcount
                 cell.flushed_upto = upto
+                cell.filter_pos = entry[6] if len(entry) > 6 else None
+                cell.filter_len = entry[7] if len(entry) > 7 else 0
                 cell.approx_keys = dcount
                 cell.state = CellState.UNLOADED if dcount > 0 else CellState.EMPTY
             replay_from = max(replay_from, self.value_wal.first_live_pos)
@@ -185,6 +244,23 @@ class TideDB:
         if isinstance(keyspace, int):
             return keyspace
         return self._ks_by_name[keyspace]
+
+    @contextmanager
+    def _allow_system_writes(self):
+        """Thread-local gate the StatsCollector's fold holds while writing
+        __system rows through the public batched write path."""
+        self._system_writes.ok = True
+        try:
+            yield
+        finally:
+            self._system_writes.ok = False
+
+    def _check_writable(self, ks_id: int) -> None:
+        if ks_id == self._system_ks_id and \
+                not getattr(self._system_writes, "ok", False):
+            raise ValueError(
+                f"keyspace {SYSTEM_KEYSPACE!r} is read-only: its rows are "
+                f"maintained by the engine's StatsCollector")
 
     def keyspace(self, name) -> KeyspaceHandle:
         """Bind a keyspace once; the handle's methods never re-thread it."""
@@ -220,12 +296,15 @@ class TideDB:
             opts: Optional[WriteOptions] = None) -> int:
         opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
+        self._check_writable(ks_id)
         payload = self._entry_parts(ks_id, key, value, opts.epoch)
         pos = self.value_wal.append(T_ENTRY, payload, opts.epoch,
                                     app_bytes=len(key) + len(value))
         self.table.apply(ks_id, key, pos)
         self.value_wal.mark_processed(pos, payload_len(payload))
         self.cache.invalidate(self._cache_key(ks_id, key))
+        if self.system is not None:
+            self.system.note_put(ks_id, key, len(value))
         if opts.durability == "sync":
             self.value_wal.flush()
         return pos
@@ -234,12 +313,15 @@ class TideDB:
                opts: Optional[WriteOptions] = None) -> int:
         opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
+        self._check_writable(ks_id)
         payload = encode_tombstone(ks_id, key, opts.epoch)
         pos = self.value_wal.append(T_TOMBSTONE, payload, opts.epoch,
                                     app_bytes=len(key))
         self.table.apply(ks_id, key, TOMB_FLAG | pos)
         self.value_wal.mark_processed(pos, len(payload))
         self.cache.invalidate(self._cache_key(ks_id, key))
+        if self.system is not None:
+            self.system.note_delete_many(ks_id, (key,))
         if opts.durability == "sync":
             self.value_wal.flush()
         return pos
@@ -294,6 +376,9 @@ class TideDB:
             return []
         opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
+        self._check_writable(ks_id)
+        if self.system is not None:
+            self.system.note_put_many(ks_id, items)
         records, app_bytes = [], 0
         epochs, mixed = [], False
         for item in items:
@@ -323,6 +408,9 @@ class TideDB:
             return []
         opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
+        self._check_writable(ks_id)
+        if self.system is not None:
+            self.system.note_delete_many(ks_id, keys)
         if epochs is not None:
             epochs = list(epochs)
             if len(epochs) != len(keys):
@@ -353,17 +441,23 @@ class TideDB:
             if op[0] == "put":
                 _, ks, key, value = op
                 ks_id = self._ks_id(ks)
+                self._check_writable(ks_id)
                 subrecords.append((T_ENTRY, self._entry_parts(
                     ks_id, key, value, opts.epoch)))
                 metas.append((ks_id, key, False))
                 app_bytes += len(key) + len(value)
+                if self.system is not None:
+                    self.system.note_put(ks_id, key, len(value))
             else:
                 _, ks, key = op
                 ks_id = self._ks_id(ks)
+                self._check_writable(ks_id)
                 subrecords.append((T_TOMBSTONE,
                                    encode_tombstone(ks_id, key, opts.epoch)))
                 metas.append((ks_id, key, True))
                 app_bytes += len(key)
+                if self.system is not None:
+                    self.system.note_delete_many(ks_id, (key,))
         if not subrecords:
             return []
         batch_pos, sub_positions = self.value_wal.append_batch(
@@ -404,6 +498,8 @@ class TideDB:
             opts: Optional[ReadOptions] = None) -> Optional[bytes]:
         opts = opts or ReadOptions()
         ks_id = self._ks_id(keyspace)
+        if self.system is not None:
+            self.system.note_reads(ks_id, (key,))
         min_live = self._min_live(opts)
         ck = self._cache_key(ks_id, key)
         if opts.min_live_pin is None:
@@ -435,6 +531,8 @@ class TideDB:
                opts: Optional[ReadOptions] = None) -> bool:
         opts = opts or ReadOptions()
         ks_id = self._ks_id(keyspace)
+        if self.system is not None:
+            self.system.note_reads(ks_id, (key,), kind="exists")
         if opts.min_live_pin is None and \
                 self.cache.get(self._cache_key(ks_id, key)) is not None:
             self.metrics.add(cache_hits=1)
@@ -457,6 +555,8 @@ class TideDB:
             return []
         opts = opts or ReadOptions()
         ks_id = self._ks_id(keyspace)
+        if self.system is not None:
+            self.system.note_reads(ks_id, keys)
         min_live = self._min_live(opts)
         self.metrics.add(batched_read_keys=len(keys))
         results: list = [None] * len(keys)
@@ -520,6 +620,8 @@ class TideDB:
             return []
         opts = opts or ReadOptions()
         ks_id = self._ks_id(keyspace)
+        if self.system is not None:
+            self.system.note_reads(ks_id, keys, kind="exists")
         self.metrics.add(batched_read_keys=len(keys))
         results = [False] * len(keys)
         if opts.min_live_pin is None:
@@ -565,7 +667,16 @@ class TideDB:
 
     # ------------------------------------------------------------- lifecycle
     def snapshot_now(self, flush_threshold: int = 1) -> dict:
-        """Flush eligible cells, persist the Control Region, GC old indices."""
+        """Flush eligible cells, persist the Control Region, GC old indices.
+
+        Also the engine's control-loop tick: workload counters fold into the
+        __system keyspace first (so the snapshot covers them), and the
+        adaptive copier pool takes one rate-limited retune step."""
+        if self.system is not None:
+            self.system.fold()
+        gov = getattr(self._copy_pool, "governor", None)
+        if gov is not None:
+            gov.maybe_adjust()
         self.flusher.flush_dirty(threshold=flush_threshold, wait=True)
         state = capture_state(self.table, self.value_wal, self.index_wal)
         write_control_region(self.path, state)
@@ -633,8 +744,20 @@ class TideDB:
             wal_tail=self.value_wal.tail,
             wal_live_bytes=self.value_wal.tail - self.value_wal.first_live_pos,
             mem_entries=self.table.mem_entries,
+            copy_pool_threads=self._copy_pool.threads,
         )
         return s
+
+    def system_tables(self) -> dict:
+        """The decoded __system tables (keyspace_stats / large_values /
+        hot_cells), keyed by keyspace name.  Folds pending counters first so
+        the view is fresh; with ``system_stats=False`` it reads whatever a
+        previous observer persisted."""
+        if self.system is not None:
+            self.system.fold()
+            return self.system.tables()
+        names = {i: cfg.name for i, cfg in enumerate(self.cfg.keyspaces)}
+        return read_tables(self, names)
 
     def __enter__(self):
         return self

@@ -17,16 +17,25 @@ from typing import Optional
 from .index import FORMATS, is_tombstone, real_pos
 from .large_table import Cell, CellState, LargeTable
 from .util import Metrics
-from .wal import HEADER_SIZE, T_INDEX, Wal
+from .wal import HEADER_SIZE, T_FILTER, T_INDEX, Wal
 
 
 class Flusher:
     def __init__(self, table: LargeTable, index_wal: Wal, value_wal: Wal,
-                 n_threads: int = 2, metrics: Optional[Metrics] = None):
+                 n_threads: int = 2, metrics: Optional[Metrics] = None,
+                 persist_filters: bool = True):
         self.table = table
         self.index_wal = index_wal
         self.value_wal = value_wal
         self.metrics = metrics or Metrics()
+        # Persist each flush's Bloom filter as a T_FILTER record right
+        # after its index blob, so reopen restores filters with one pread
+        # instead of a lazy rebuild (DbConfig.persist_filters gates it).
+        self.persist_filters = persist_filters
+        # Optional StatsCollector (the __system keyspace subsystem): flush
+        # events feed the per-keyspace rollups.  Set by TideDB after
+        # construction; None = no observation.
+        self.collector = None
         self.pool = ThreadPoolExecutor(max_workers=n_threads,
                                        thread_name_prefix="tide-flusher")
         self._closed = False
@@ -96,6 +105,22 @@ class Flusher:
                     if not is_tombstone(p):
                         bloom.add(k)
 
+            # Persist the filter next to its index blob (serialized NOW,
+            # before phase 3 seeds post-snapshot dirty keys into the live
+            # filter: the persisted bits must cover exactly the blob's key
+            # set, so a reopen-time load is bit-identical to a rebuild —
+            # dirty-buffer keys re-seed from the WAL replay either way).
+            filter_pos, filter_len = None, 0
+            if bloom is not None and self.persist_filters:
+                fblob = bloom.to_bytes()
+                frec = self.index_wal.append(T_FILTER, fblob)
+                self.index_wal.mark_processed(frec, len(fblob))
+                filter_pos, filter_len = frec + HEADER_SIZE, len(fblob)
+                self.metrics.add(bloom_filters_persisted=1)
+
+            if self.collector is not None:
+                self.collector.note_flush(ks_id, len(blob) + filter_len)
+
             # Phase 3 (under row lock): unmerge + atomic pointer swap.
             with ks.row_lock(cell.cell_id):
                 removed = 0
@@ -109,6 +134,7 @@ class Flusher:
                 cell.disk_count = count
                 cell.flushed_upto = new_flushed_upto
                 cell.bloom = bloom
+                cell.filter_pos, cell.filter_len = filter_pos, filter_len
                 cell.approx_keys = count
                 if cell.mem:
                     cell.state = CellState.DIRTY_UNLOADED

@@ -88,8 +88,14 @@ def _searchsorted_lex(cols: np.ndarray, words: tuple[int, ...]) -> tuple[int, bo
         if lo >= hi:
             return lo, False
         col = cols[lo:hi, j]
-        l = int(np.searchsorted(col, w, side="left"))
-        r = int(np.searchsorted(col, w, side="right"))
+        # The needle must carry the column's (big-endian) dtype: numpy
+        # 2.0.x type-promotes a Python-int needle against a byte-swapped
+        # array inconsistently between side="left" and side="right",
+        # yielding insertion points that disagree with lexicographic
+        # order whenever adjacent keys share a leading word.
+        needle = np.array(w, dtype=col.dtype)
+        l = int(np.searchsorted(col, needle, side="left"))
+        r = int(np.searchsorted(col, needle, side="right"))
         lo, hi = lo + l, lo + r
     return lo, lo < hi
 

@@ -57,7 +57,8 @@ class KeyspaceConfig:
 
 class Cell:
     __slots__ = ("cell_id", "state", "mem", "disk_pos", "disk_len", "disk_count",
-                 "flushed_upto", "min_dirty_pos", "bloom", "flushing", "approx_keys")
+                 "flushed_upto", "min_dirty_pos", "bloom", "flushing", "approx_keys",
+                 "filter_pos", "filter_len")
 
     def __init__(self, cell_id):
         self.cell_id = cell_id
@@ -66,6 +67,8 @@ class Cell:
         self.disk_pos: Optional[int] = None   # Index Store payload offset
         self.disk_len: int = 0
         self.disk_count: int = 0
+        self.filter_pos: Optional[int] = None  # persisted Bloom filter offset
+        self.filter_len: int = 0
         self.flushed_upto: int = 0             # WAL covered by the disk index
         self.min_dirty_pos: Optional[int] = None
         self.bloom: Optional[BloomFilter] = None
@@ -320,17 +323,23 @@ class LargeTable:
         return lambda off, n: self._index_pread(base + off, min(n, lim - off))
 
     def _ensure_bloom(self, ks: Keyspace, cell: Cell) -> None:
-        """Lazy Bloom rebuild on first probe after reopen (§3.2): recovery
-        restores cell disk pointers but not filters (those are rebuilt only
-        at flush time), so a freshly reopened store would answer every cold
-        ``exists`` through Index Store reads until the first flush.  The
-        first probe of a disk-resident, filterless cell rebuilds the filter
-        from the on-disk index *outside* the row lock (one blob read, paid
-        once per cell per process), seeds it with the live dirty buffer
-        under the lock, and installs it only if the cell still points at
-        the same blob — a racing flush installs its own complete filter
-        and wins.  Keys applied after the install reach the filter through
-        the normal ``apply`` path (bloom is non-None from then on)."""
+        """Restore a missing Bloom filter on first probe after reopen
+        (§3.2): recovery restores cell disk pointers but not in-memory
+        filters, so a freshly reopened store would answer every cold
+        ``exists`` through Index Store reads until the first flush.
+
+        Fast path: flush persisted the filter next to the index blob (a
+        ``T_FILTER`` record; the control region carries its position), so
+        the first probe loads it back with one small pread — no index
+        parse, no key rehashing.  Fallback: rebuild from the on-disk index
+        exactly as before (stores written before filters were persisted,
+        or a filter record lost to Index Store GC).  Either way the work
+        happens *outside* the row lock (paid once per cell per process),
+        the filter is seeded with the live dirty buffer under the lock,
+        and installs only if the cell still points at the same blob — a
+        racing flush installs its own complete filter and wins.  Keys
+        applied after the install reach the filter through the normal
+        ``apply`` path (bloom is non-None from then on)."""
         if cell.bloom is not None or not ks.cfg.use_bloom:
             return
         # Unlocked pre-check (racy reads, re-verified under the lock): a
@@ -345,23 +354,34 @@ class LargeTable:
                                           CellState.DIRTY_UNLOADED)
                     or not cell.has_disk()):
                 return
-            snap = (cell.disk_pos, cell.disk_len, cell.disk_count)
-        _, _, load_fn = FORMATS[ks.cfg.index_format]
-        try:
-            entries = load_fn(self._bounded_pread(snap[0], snap[1]),
-                              snap[2], ks.cfg.key_len)
-        except Exception:
-            return          # GC/flush race: keep answering through disk reads
-        if len(entries) < snap[2]:
-            return          # short read (blob replaced underneath us)
-        bloom = BloomFilter(max(snap[2], 64), ks.cfg.bloom_bits_per_key)
-        bloom.add_many([k for k, p in entries if not is_tombstone(p)])
+            snap = (cell.disk_pos, cell.disk_len, cell.disk_count,
+                    cell.filter_pos, cell.filter_len)
+        bloom = None
+        if snap[3] is not None and snap[4] > 0:
+            try:
+                raw = self._index_pread(snap[3], snap[4])
+                if len(raw) == snap[4]:
+                    bloom = BloomFilter.from_bytes(raw)
+                    self.metrics.add(bloom_filters_loaded=1)
+            except Exception:
+                bloom = None     # torn/GCed filter record: rebuild below
+        if bloom is None:
+            _, _, load_fn = FORMATS[ks.cfg.index_format]
+            try:
+                entries = load_fn(self._bounded_pread(snap[0], snap[1]),
+                                  snap[2], ks.cfg.key_len)
+            except Exception:
+                return   # GC/flush race: keep answering through disk reads
+            if len(entries) < snap[2]:
+                return   # short read (blob replaced underneath us)
+            bloom = BloomFilter(max(snap[2], 64), ks.cfg.bloom_bits_per_key)
+            bloom.add_many([k for k, p in entries if not is_tombstone(p)])
+            self.metrics.add(bloom_lazy_rebuilds=1)
         with ks.row_lock(cell.cell_id):
             if cell.bloom is None and cell.disk_pos == snap[0]:
                 bloom.add_many([k for k, p in cell.mem.items()
                                 if not is_tombstone(p)])
                 cell.bloom = bloom
-                self.metrics.add(bloom_lazy_rebuilds=1)
 
     def _disk_lookup(self, ks: Keyspace, cell: Cell, key: bytes) -> Optional[int]:
         if not cell.has_disk():

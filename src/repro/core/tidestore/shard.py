@@ -75,18 +75,27 @@ class ShardedTideDB:
         # N shards × M copiers (each shard's fan-out thread additionally
         # copies its own first sub-run, so per-shard writes still overlap).
         # The same pool serves per-shard relocation batches, so reclamation
-        # concurrency is bounded store-wide too.
-        self._copy_pool = CopyPool(
-            clamp_copy_threads(self.cfg.copy_threads)
-            if self.cfg.clamp_copy_threads else self.cfg.copy_threads)
+        # concurrency is bounded store-wide too.  copy_threads=None builds
+        # an adaptive pool with ONE store-wide governor (attached to the
+        # shared pool; every shard's snapshot tick calls maybe_adjust, the
+        # governor's own rate limit dedupes them).
+        if self.cfg.copy_threads is None:
+            self._copy_pool = CopyPool(None)
+            from .system import CopierGovernor
+            self._copy_pool.governor = CopierGovernor(self._copy_pool)
+        else:
+            self._copy_pool = CopyPool(
+                clamp_copy_threads(self.cfg.copy_threads)
+                if self.cfg.clamp_copy_threads else self.cfg.copy_threads)
         self.shards = [TideDB(os.path.join(path, f"shard-{i:02d}"), shard_cfg,
                               copy_pool=self._copy_pool)
                        for i in range(n_shards)]
         # The clamp happened before any shard metrics existed; record it
         # once (shard 0) so the summed stats() surface shows the gap.
-        shaved = self.cfg.copy_threads - self._copy_pool.threads
-        if shaved > 0:
-            self.shards[0].metrics.add(copy_threads_clamped=shaved)
+        if self.cfg.copy_threads is not None:
+            shaved = self.cfg.copy_threads - self._copy_pool.threads
+            if shaved > 0:
+                self.shards[0].metrics.add(copy_threads_clamped=shaved)
         self._pool = ThreadPoolExecutor(max_workers=threads or n_shards,
                                         thread_name_prefix="tide-shard")
         self._prune_rr = 0
@@ -319,6 +328,50 @@ class ShardedTideDB:
                 if isinstance(v, (int, float)):
                     out[k] = out.get(k, 0) + v
         return out
+
+    def system_tables(self) -> dict:
+        """Merged __system view: every shard observes only its own key
+        subset and writes rows under IDENTICAL row keys, so the sharded
+        ``prev`` (which dedupes equal keys across shards) cannot read
+        them — each shard's tables are scanned directly and merged here.
+        keyspace_stats sums counters; large_values re-ranks across shards;
+        hot_cells re-ranks and tags each row with its shard id (cell ids
+        are per-shard)."""
+        per_shard = [self._pool.submit(sh.system_tables)
+                     for sh in self.shards]
+        top_n = self.shards[0].cfg.system_top_n
+        stats: dict = {}
+        large: dict = {}
+        hot: dict = {}
+        agg = self.stats()
+        wa = (agg["bytes_written_disk"] / agg["bytes_written_app"]
+              if agg.get("bytes_written_app") else 0.0)
+        for sid, fut in enumerate(per_shard):
+            t = fut.result()
+            for ks, row in t["keyspace_stats"].items():
+                dst = stats.setdefault(ks, {})
+                for k, v in row.items():
+                    if isinstance(v, bool) or not isinstance(v, (int, float)):
+                        dst[k] = v
+                    elif k == "write_amp_store":
+                        dst[k] = wa          # store-wide, not per-shard
+                    else:
+                        dst[k] = dst.get(k, 0) + v
+            for ks, rows in t["large_values"].items():
+                large.setdefault(ks, []).extend(rows)
+            for ks, rows in t["hot_cells"].items():
+                hot.setdefault(ks, []).extend(
+                    dict(r, shard=sid) for r in rows)
+        for ks in large:
+            large[ks] = sorted(large[ks],
+                               key=lambda r: (-r["size"], r["key"]))[:top_n]
+        for ks in hot:
+            hot[ks] = sorted(hot[ks],
+                             key=lambda r: (-(r["reads"] + r["writes"]),
+                                            r["shard"],
+                                            str(r["cell_id"])))[:top_n]
+        return {"keyspace_stats": stats, "large_values": large,
+                "hot_cells": hot}
 
     def close(self, flush: bool = True) -> None:
         if self._closed:

@@ -80,9 +80,13 @@ def capture_state(table: LargeTable, value_wal: Wal, index_wal: Wal) -> dict:
         if not cell.has_disk():
             continue
         cid = cell.cell_id
+        # Trailing (filter_pos, filter_len) extends the seed 6-tuple: the
+        # persisted-Bloom pointer rides the same record, and recovery
+        # accepts both lengths (older control regions simply rebuild
+        # filters lazily).
         cells.append((ks_id, cid if isinstance(cid, int) else cid,
                       cell.disk_pos, cell.disk_len, cell.disk_count,
-                      cell.flushed_upto))
+                      cell.flushed_upto, cell.filter_pos, cell.filter_len))
     last = value_wal.tracker.last_processed
     return {
         "replay_from": table.replay_from(last),

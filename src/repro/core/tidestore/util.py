@@ -105,11 +105,16 @@ class Metrics:
     blob_cache_hits: int = 0           # memoized parsed-blob reuses
     bloom_negative: int = 0
     bloom_lazy_rebuilds: int = 0       # filters rebuilt on first post-reopen probe
+    bloom_filters_persisted: int = 0   # filters written next to index blobs
+    bloom_filters_loaded: int = 0      # persisted filters loaded on reopen
     fused_bloom_probes: int = 0        # fused ragged probes (1 per batch)
     parallel_copy_subruns: int = 0     # pwritev sub-runs issued by append_many
     cache_hits: int = 0
     cache_misses: int = 0
     copy_threads_clamped: int = 0      # requested − effective CopyPool threads
+    copy_pool_resizes: int = 0         # adaptive CopyPool retunes (governor)
+    system_folds: int = 0              # StatsCollector folds into __system
+    system_rows_written: int = 0       # rows written by those folds
     relocated_entries: int = 0
     relocated_bytes: int = 0
     relocation_batches: int = 0        # append_many batches issued by relocation

@@ -115,13 +115,37 @@ class CopyPool:
     and index WALs, and ``ShardedTideDB`` hands every shard the same pool
     so N shards × M copiers never oversubscribes the host.  ``pwritev``
     releases the GIL, so copies genuinely run in parallel.
+
+    ``threads=None`` builds an *adaptive* pool: the effective copier count
+    starts at the host core budget and may be retuned at runtime via
+    ``resize`` (a ``system.CopierGovernor`` drives it from observed load —
+    the replacement for the manual ``DbConfig.copy_threads`` knob).
+    ``capacity`` bounds how far ``resize`` may grow the pool; the executor
+    is sized once at capacity (workers spawn lazily, so an idle headroom
+    thread costs nothing) and ``resize`` is a plain int swap — safe while
+    copies are in flight, affecting only how future batches are planned.
     """
 
-    def __init__(self, threads: int = 1):
-        self.threads = max(1, int(threads))
-        self._pool = (ThreadPoolExecutor(max_workers=self.threads - 1,
+    def __init__(self, threads: Optional[int] = 1,
+                 capacity: Optional[int] = None):
+        if threads is None:                  # adaptive: start at core budget
+            cores = os.cpu_count() or 1
+            capacity = cores if capacity is None else capacity
+            threads = min(cores, capacity)
+        self.capacity = max(1, int(capacity if capacity is not None
+                                   else threads))
+        self.threads = max(1, min(int(threads), self.capacity))
+        self.governor = None                 # set by the owning engine
+        self._pool = (ThreadPoolExecutor(max_workers=self.capacity - 1,
                                          thread_name_prefix="tide-copy")
-                      if self.threads > 1 else None)
+                      if self.capacity > 1 else None)
+
+    def resize(self, threads: int) -> int:
+        """Retune the effective copier count within [1, capacity]; returns
+        the new count.  Callers planning sub-runs read ``self.threads`` at
+        batch start, so an in-flight batch finishes under its old plan."""
+        self.threads = max(1, min(int(threads), self.capacity))
+        return self.threads
 
     def run(self, fn, jobs) -> None:
         """Run ``fn`` over ``jobs``, fanned across the copiers.  Always
@@ -157,6 +181,7 @@ T_ENTRY = 1      # key/value insert
 T_TOMBSTONE = 2  # key delete
 T_BATCH = 3      # atomic batch: payload is a run of sub-records
 T_INDEX = 4      # serialized cell index blob (Index Store)
+T_FILTER = 5     # serialized cell Bloom filter, persisted next to its index
 
 _HDR = struct.Struct("<BII")     # type, payload_len, payload_crc
 HEADER_SIZE = _HDR.size          # 9 bytes

@@ -36,6 +36,7 @@ import numpy as np
 from repro.core.tidestore.api import WriteBatch
 from repro.models import serve as serve_mod
 from repro.models.base import ModelConfig
+from repro.serving.admission import AdmissionController
 
 
 @dataclasses.dataclass
@@ -102,9 +103,19 @@ class KvBatchServer:
     """
 
     def __init__(self, db, *, max_batch: int = 256, write_opts=None,
-                 prune_opts=None):
+                 prune_opts=None, admission=None):
         self.db = db
         self.max_batch = max_batch
+        # Overload control at the submission edge (see serving/admission):
+        # an AdmissionController (or an AdmissionConfig, wrapped here)
+        # bounds the queue by request *cost* — submit_* raises Overloaded
+        # (policy="shed") or blocks until the queue drains to the low
+        # watermark (policy="backpressure") instead of growing the deque
+        # without limit.  None keeps the seed behavior: unbounded queue.
+        if admission is not None and not isinstance(admission,
+                                                    AdmissionController):
+            admission = AdmissionController(admission)
+        self.admission = admission
         # Per-stage write options (WriteOptions): carries the durability
         # class and the parallel-copy routing knob into every retired write
         # stage — a server over an engine configured with
@@ -140,6 +151,13 @@ class KvBatchServer:
         norm = getattr(self.db, "_ks_id", None)
         if norm is not None:
             norm(req.keyspace)
+        if self.admission is not None:
+            # Charge BEFORE enqueueing: a shed request never enters the
+            # queue, a backpressured submitter blocks here.  The charged
+            # cost rides the request so step() can release exactly it.
+            cost = self.admission.cost_of(req)
+            self.admission.admit(cost)   # may raise Overloaded / block
+            req._cost = cost
         with self._lock:
             self.queue.append(req)
         return req
@@ -202,6 +220,12 @@ class KvBatchServer:
         for is_write, ops, _ in stages:
             served += (self._serve_writes(ops) if is_write
                        else self._serve_reads(ops))
+            # Return each served stage's admission cost promptly so
+            # backpressured submitters wake as soon as the drain crosses
+            # the low watermark, not only at step end.
+            if self.admission is not None:
+                self.admission.release(
+                    sum(getattr(r, "_cost", 0.0) for r in ops))
             # One bounded relocation slice between serving stages: the
             # slice scans at most PruneOptions.batch_records WAL records
             # and re-appends survivors through one append_many, so a stage
@@ -322,7 +346,9 @@ class KvBatchServer:
                                if self.batches_served else 0.0),
                 "prune_steps": self.prune_steps,
                 "prune_scanned": self.prune_scanned,
-                "queued": queued}
+                "queued": queued,
+                **(self.admission.stats() if self.admission is not None
+                   else {})}
 
 
 class ServingEngine:

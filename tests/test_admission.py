@@ -1,0 +1,239 @@
+"""Admission control for the batch server: cost accounting, the shed and
+backpressure policies (bounded queue, hysteresis, zero loss), and the
+deterministic stalled-store overload scenario."""
+import hashlib
+import shutil
+import tempfile
+import threading
+
+import pytest
+
+from repro.core.tidestore import DbConfig, KeyspaceConfig, TideDB
+from repro.core.tidestore.wal import WalConfig
+from repro.serving.admission import (AdmissionConfig, AdmissionController,
+                                     Overloaded)
+from repro.serving.engine import KvBatchServer
+
+
+def small_cfg(**kw):
+    defaults = dict(
+        keyspaces=[KeyspaceConfig("default", n_cells=8,
+                                  dirty_flush_threshold=64)],
+        wal=WalConfig(segment_size=64 * 1024, background=False),
+        index_wal=WalConfig(segment_size=1 * 1024 * 1024, background=False),
+        background_snapshots=False,
+        cache_bytes=0,
+    )
+    defaults.update(kw)
+    return DbConfig(**defaults)
+
+
+def keys_n(n, tag=""):
+    return [hashlib.sha256(f"{tag}{i}".encode()).digest() for i in range(n)]
+
+
+@pytest.fixture()
+def tmpdir():
+    d = tempfile.mkdtemp(prefix="tide-admission-")
+    yield d
+    shutil.rmtree(d, ignore_errors=True)
+
+
+# ------------------------------------------------------------------ config
+class TestAdmissionConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            AdmissionConfig(high_watermark=0)
+        with pytest.raises(ValueError):
+            AdmissionConfig(low_watermark=2000.0)   # above high
+        with pytest.raises(ValueError):
+            AdmissionConfig(policy="panic")
+        with pytest.raises(ValueError):
+            AdmissionConfig(read_cost=-1.0)
+        cfg = AdmissionConfig(high_watermark=100.0)
+        assert cfg.resolved_low == 50.0             # default hysteresis
+        assert AdmissionConfig(high_watermark=100.0,
+                               low_watermark=80.0).resolved_low == 80.0
+
+    def test_cost_model(self):
+        ctl = AdmissionController(AdmissionConfig())
+
+        class R:
+            def __init__(self, op, value=None):
+                self.op, self.value = op, value
+
+        read = ctl.cost_of(R("get"))
+        exists = ctl.cost_of(R("exists"))
+        small_put = ctl.cost_of(R("put", b"x"))
+        big_put = ctl.cost_of(R("put", b"x" * 64 * 1024))
+        delete = ctl.cost_of(R("delete"))
+        assert exists < read                        # existence is cheaper
+        assert big_put > small_put                  # per-KB surcharge
+        assert big_put == pytest.approx(1.0 + 0.25 * 64)
+        assert delete == pytest.approx(1.0)
+
+
+# -------------------------------------------------------------------- shed
+class TestShedPolicy:
+    def test_sheds_at_watermark_and_recovers(self):
+        ctl = AdmissionController(AdmissionConfig(high_watermark=4.0,
+                                                  policy="shed"))
+        for _ in range(4):
+            ctl.admit(1.0)
+        with pytest.raises(Overloaded) as ei:
+            ctl.admit(1.0)
+        assert ei.value.queued_cost == pytest.approx(4.0)
+        assert ei.value.high_watermark == pytest.approx(4.0)
+        s = ctl.stats()
+        assert s["admission_shed"] == 1
+        assert s["admission_admitted"] == 4
+        assert s["admission_queued_cost"] == pytest.approx(4.0)
+        # draining re-opens the door
+        ctl.release(2.0)
+        ctl.admit(1.0)
+        assert ctl.stats()["admission_queued_cost"] == pytest.approx(3.0)
+
+    def test_oversized_single_request_still_admitted_when_idle(self):
+        # a request dearer than the watermark must not deadlock an idle
+        # controller: with nothing queued it is admitted anyway
+        ctl = AdmissionController(AdmissionConfig(high_watermark=2.0,
+                                                  policy="backpressure"))
+        ctl.admit(5.0)
+        assert ctl.stats()["admission_queued_cost"] == pytest.approx(5.0)
+
+    def test_server_sheds_when_stalled(self, tmpdir):
+        """Deterministic overload: nobody calls step(), so the queue can
+        only grow — admission must hit the watermark and shed, and the
+        queue must stay bounded."""
+        with TideDB(tmpdir, small_cfg()) as db:
+            srv = KvBatchServer(db, admission=AdmissionConfig(
+                high_watermark=8.0, policy="shed"))
+            shed = 0
+            for k in keys_n(50):
+                try:
+                    srv.submit_get(k)
+                except Overloaded:
+                    shed += 1
+            assert shed == 50 - 8               # exactly watermark admitted
+            assert len(srv.queue) == 8          # bounded, not 50
+            # serving drains the accounted cost and re-opens admission
+            srv.step()
+            assert srv.stats()["admission_queued_cost"] == pytest.approx(0.0)
+            srv.submit_get(keys_n(1, "again")[0])
+            srv.step()
+
+
+# ------------------------------------------------------------ backpressure
+class TestBackpressurePolicy:
+    def test_waiter_unblocks_at_low_watermark(self):
+        ctl = AdmissionController(AdmissionConfig(high_watermark=4.0,
+                                                  low_watermark=2.0))
+        for _ in range(4):
+            ctl.admit(1.0)
+        entered = threading.Event()
+        admitted = threading.Event()
+
+        def blocked():
+            entered.set()
+            ctl.admit(1.0)
+            admitted.set()
+
+        t = threading.Thread(target=blocked, daemon=True)
+        t.start()
+        assert entered.wait(2.0)
+        assert not admitted.wait(0.15)          # full queue: caller parks
+        ctl.release(1.0)                        # 3.0 > low: still parked
+        assert not admitted.wait(0.15)
+        ctl.release(1.0)                        # 2.0: charging would exceed
+        assert not admitted.wait(0.15)          # low, so still parked
+        ctl.release(1.0)                        # 1.0 + cost 1.0 ≤ low: wakes
+        assert admitted.wait(2.0)
+        t.join(2.0)
+        assert ctl.stats()["admission_waits"] == 1
+
+    def test_timeout_escalates_to_shed(self):
+        ctl = AdmissionController(AdmissionConfig(high_watermark=2.0,
+                                                  max_wait_s=0.05))
+        ctl.admit(1.0)
+        ctl.admit(1.0)
+        with pytest.raises(Overloaded):
+            ctl.admit(1.0)
+        assert ctl.stats()["admission_shed"] == 1
+
+    def test_zero_loss_under_sustained_overload(self, tmpdir):
+        """Producers submit 4x more than the watermark admits at once;
+        a consumer steps the server concurrently.  Backpressure means
+        every single request is eventually served — none lost, and the
+        accounted queue cost never exceeds the high watermark."""
+        with TideDB(tmpdir, small_cfg()) as db:
+            srv = KvBatchServer(db, max_batch=8, admission=AdmissionConfig(
+                high_watermark=16.0))
+            ks = keys_n(64, "zl")
+            db.put_many([(k, b"v") for k in ks])
+            results = []
+            res_lock = threading.Lock()
+
+            def producer(chunk):
+                for k in chunk:
+                    r = srv.submit_get(k)
+                    with res_lock:
+                        results.append(r)
+
+            threads = [threading.Thread(target=producer,
+                                        args=(ks[i::4],), daemon=True)
+                       for i in range(4)]
+            for t in threads:
+                t.start()
+            served = 0
+            while served < len(ks):
+                served += srv.step()
+                assert srv.admission.stats()["admission_peak_cost"] <= 16.0
+            for t in threads:
+                t.join(5.0)
+            assert len(results) == 64           # zero requests lost
+            assert all(r.done and r.value == b"v" for r in results)
+            assert srv.stats()["admission_shed"] == 0
+
+    def test_release_is_per_stage_not_per_step(self, tmpdir):
+        """A mixed read/write step serves in stages; cost must drain as
+        stages retire so waiters wake as soon as room exists."""
+        with TideDB(tmpdir, small_cfg()) as db:
+            srv = KvBatchServer(db, admission=AdmissionConfig(
+                high_watermark=100.0))
+            k = keys_n(1)[0]
+            srv.submit_put(k, b"v")
+            srv.submit_get(k)
+            assert srv.stats()["admission_queued_cost"] > 0
+            srv.step()
+            assert srv.stats()["admission_queued_cost"] == pytest.approx(0.0)
+
+
+# ------------------------------------------------------------- integration
+class TestServerIntegration:
+    def test_server_without_admission_is_unbounded(self, tmpdir):
+        with TideDB(tmpdir, small_cfg()) as db:
+            srv = KvBatchServer(db)
+            for k in keys_n(100):
+                srv.submit_get(k)               # never raises, never blocks
+            assert len(srv.queue) == 100
+            assert "admission_admitted" not in srv.stats()
+
+    def test_admission_config_object_or_controller(self, tmpdir):
+        with TideDB(tmpdir, small_cfg()) as db:
+            srv1 = KvBatchServer(db, admission=AdmissionConfig())
+            assert isinstance(srv1.admission, AdmissionController)
+            ctl = AdmissionController(AdmissionConfig())
+            srv2 = KvBatchServer(db, admission=ctl)
+            assert srv2.admission is ctl
+
+    def test_stats_surface_admission_counters(self, tmpdir):
+        with TideDB(tmpdir, small_cfg()) as db:
+            srv = KvBatchServer(db, admission=AdmissionConfig(
+                high_watermark=10.0, policy="shed"))
+            for k in keys_n(5):
+                srv.submit_exists(k)
+            s = srv.stats()
+            assert s["admission_admitted"] == 5
+            assert s["admission_queued_cost"] == pytest.approx(2.5)
+            srv.step()
+            assert srv.stats()["admission_queued_cost"] == pytest.approx(0.0)

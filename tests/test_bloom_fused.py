@@ -257,7 +257,10 @@ class TestLazyBloomRebuild:
     after recovery."""
 
     def _seed(self, d, n=80):
-        cfg = small_cfg(blob_cache_bytes=0)   # no memo: probes must use bloom
+        # no blob memo: probes must use bloom; no persisted filters: this
+        # class exercises the lazy REBUILD fallback (the persisted fast
+        # path is covered in test_system_keyspace.py)
+        cfg = small_cfg(blob_cache_bytes=0, persist_filters=False)
         db = TideDB(d, cfg)
         ks = keys_n(n, tag="lz")
         for k in ks:
@@ -292,8 +295,11 @@ class TestLazyBloomRebuild:
         got = db.multi_exists(ks + miss)
         assert got == [False] + [True] * (len(ks) - 1) + [False] * len(miss)
         assert db.metrics.bloom_lazy_rebuilds >= 1
+        # every touched (user-keyspace) cell is filtered; the reserved
+        # __system keyspace's cells were not probed and stay lazy
         assert all(c.bloom is not None
-                   for _, c in db.table.all_cells() if c.has_disk())
+                   for ks_id, c in db.table.all_cells()
+                   if c.has_disk() and ks_id == 0)
         # with every touched cell filtered (and no blob memo), a repeat
         # all-miss batch is answered by the filters alone
         blob_before = db.metrics.batched_blob_reads
@@ -315,13 +321,15 @@ class TestLazyBloomRebuild:
                 twin.put(k, b"v-" + k[:4])
             twin.delete(ks[0])
             twin.snapshot_now(flush_threshold=1)
-            for _, cell in twin.table.all_cells():
-                if cell.bloom is not None:
+            # user keyspace only: __system cells share the 0..7 cell-id
+            # space and would collide in a cell_id-keyed dict
+            for ks_id, cell in twin.table.all_cells():
+                if ks_id == 0 and cell.bloom is not None:
                     flush_blooms[cell.cell_id] = cell.bloom.bits.copy()
         db.multi_exists(keys_n(30, tag="touch"))   # trigger lazy rebuilds
         rebuilt = {cell.cell_id: cell.bloom.bits
-                   for _, cell in db.table.all_cells()
-                   if cell.bloom is not None}
+                   for ks_id, cell in db.table.all_cells()
+                   if ks_id == 0 and cell.bloom is not None}
         assert rebuilt                        # something was rebuilt
         for cid, bits in rebuilt.items():
             assert (bits == flush_blooms[cid]).all()
