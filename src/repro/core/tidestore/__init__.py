@@ -8,7 +8,8 @@ from .index import (HeaderLookup, OptimisticLookup, serialize_header,
 from .large_table import CellState, KeyspaceConfig, LargeTable
 from .relocate import Decision, PruneController, PruneThread, Relocator
 from .shard import ShardedTideDB
-from .system import (SYSTEM_KEYSPACE, CopierGovernor, StatsCollector,
+from .system import (SYSTEM_KEYSPACE, SYSTEM_KS_ID, CopierGovernor,
+                     StatsCollector,
                      decode_row_key, read_tables, row_key,
                      system_keyspace_config)
 from .util import Metrics, PositionTracker
@@ -22,6 +23,7 @@ __all__ = [
     "Metrics", "PositionTracker", "LruCache", "BlobArrayCache",
     "OptimisticLookup", "HeaderLookup", "serialize_optimistic",
     "serialize_header",
-    "SYSTEM_KEYSPACE", "StatsCollector", "CopierGovernor", "read_tables",
+    "SYSTEM_KEYSPACE", "SYSTEM_KS_ID", "StatsCollector", "CopierGovernor",
+    "read_tables",
     "row_key", "decode_row_key", "system_keyspace_config",
 ]

@@ -234,8 +234,18 @@ class KeyspaceHandle:
         prefix's upper bound (the reverse-iterator read op is the engine's
         only ordered primitive).  ``limit`` bounds the result count,
         keeping the LAST ``limit`` pairs in key order (the walk is
-        highest-key-first).  The __system tables read through this."""
-        pad = 64          # probe must compare above any real key suffix
+        highest-key-first).  The __system tables read through this.
+
+        The upper-bound probe must compare above every real key sharing the
+        prefix: pad with 0xff out to the keyspace's configured key width
+        when the engine exposes it (``key_len``), else a 64-byte fallback —
+        a fixed pad shorter than ``key_len - len(prefix)`` would silently
+        skip keys whose suffix starts with 0xff bytes."""
+        key_len_of = getattr(self.engine, "key_len", None)
+        klen = key_len_of(self.name) if key_len_of is not None else 0
+        # +1: a key that IS prefix + all-0xff padding would equal an
+        # exact-width probe, and ``prev`` is strictly-less-than.
+        pad = max(64, (klen or 0) - len(prefix) + 1)
         probe = prefix + b"\xff" * pad
         out: list = []
         while True:

@@ -26,8 +26,8 @@ from .large_table import CellState, KeyspaceConfig, LargeTable
 from .relocate import PruneController, PruneThread, Relocator
 from .snapshot import (SnapshotThread, capture_state, read_control_region,
                        write_control_region)
-from .system import (SYSTEM_KEYSPACE, CopierGovernor, StatsCollector,
-                     read_tables, system_keyspace_config)
+from .system import (SYSTEM_KEYSPACE, SYSTEM_KS_ID, CopierGovernor,
+                     StatsCollector, read_tables, system_keyspace_config)
 from .util import Metrics
 from .wal import (_ENTRY_HDR, HEADER_SIZE, T_ENTRY, T_INDEX, T_TOMBSTONE,
                   CopyPool, Wal, WalConfig, decode_entry, decode_tombstone,
@@ -99,17 +99,25 @@ class TideDB:
         os.makedirs(path, exist_ok=True)
         self.metrics = Metrics()
 
-        # The reserved __system keyspace (self-observation tables) rides at
-        # the END of the user's keyspace list so user ks_ids are stable, and
-        # it ALWAYS exists — even with system_stats=False — so WAL replay of
-        # system rows written under a previous configuration never dangles.
+        # The reserved __system keyspace (self-observation tables) lives at
+        # the FIXED sentinel id SYSTEM_KS_ID (0xFFFF), never a position in
+        # the user's keyspace list: rows persisted under it (WAL entries,
+        # control-region cell pointers) stay attached to __system across
+        # reopens even when the user adds or removes keyspaces — a
+        # positional id would silently re-attach them to whichever user
+        # keyspace inherited the index.  It ALWAYS exists — even with
+        # system_stats=False — so replay of system rows written under a
+        # previous configuration never dangles.
         for ks_cfg in self.cfg.keyspaces:
             if ks_cfg.name == SYSTEM_KEYSPACE:
                 raise ValueError(
                     f"keyspace name {SYSTEM_KEYSPACE!r} is reserved for the "
                     f"engine's system tables")
-        all_keyspaces = list(self.cfg.keyspaces) + [system_keyspace_config()]
-        self._system_ks_id = len(all_keyspaces) - 1
+        if len(self.cfg.keyspaces) >= SYSTEM_KS_ID:
+            raise ValueError(
+                f"at most {SYSTEM_KS_ID - 1} user keyspaces (the u16 id "
+                f"space minus the reserved {SYSTEM_KEYSPACE!r} sentinel)")
+        self._system_ks_id = SYSTEM_KS_ID
         self._system_writes = threading.local()
 
         # One copier pool shared by both WALs (an injected pool — e.g. from
@@ -139,9 +147,10 @@ class TideDB:
                              copy_pool=self._copy_pool)
         self.index_wal = Wal(path, "index", self.cfg.index_wal, self.metrics,
                              copy_pool=self._copy_pool)
-        self.table = LargeTable(all_keyspaces, self.index_wal.pread,
-                                self.metrics,
-                                blob_cache_bytes=self.cfg.blob_cache_bytes)
+        self.table = LargeTable(
+            self.cfg.keyspaces, self.index_wal.pread, self.metrics,
+            blob_cache_bytes=self.cfg.blob_cache_bytes,
+            reserved=[(SYSTEM_KS_ID, system_keyspace_config())])
         self.cache = LruCache(self.cfg.cache_bytes)
         self.flusher = Flusher(self.table, self.index_wal, self.value_wal,
                                self.cfg.flusher_threads, self.metrics,
@@ -201,7 +210,7 @@ class TideDB:
                 # persisted-Bloom pointer (filter_pos, filter_len).  An old
                 # control region simply rebuilds filters lazily.
                 ks_id, cid, dpos, dlen, dcount, upto = entry[:6]
-                if ks_id >= len(self.table.keyspaces):
+                if not self.table.has_ks(ks_id):
                     continue                 # keyspace no longer configured
                 ks = self.table.ks(ks_id)
                 if isinstance(cid, (bytes, bytearray)):
@@ -233,6 +242,12 @@ class TideDB:
             else:
                 continue
             self.value_wal._note_epoch(pos // seg_size, epoch)
+            if not self.table.has_ks(ks_id):
+                # Keyspace no longer configured (or rows persisted under a
+                # legacy positional __system id): the record is unreachable
+                # but must not fail the open.
+                self.metrics.add(replay_orphan_records=1)
+                continue
             cell = self.table.ks(ks_id).cell_for_key(key)
             if pos < cell.flushed_upto:
                 continue                     # already covered by flushed index
@@ -266,6 +281,12 @@ class TideDB:
         """Bind a keyspace once; the handle's methods never re-thread it."""
         self._ks_id(name)                    # validate eagerly
         return KeyspaceHandle(self, name)
+
+    def key_len(self, keyspace=0) -> int:
+        """The keyspace's configured fixed key width (bytes).  Prefix-scan
+        helpers size their upper-bound probes from this so a probe always
+        compares above every real key sharing the prefix."""
+        return self.table.ks(self._ks_id(keyspace)).cfg.key_len
 
     @staticmethod
     def _wopts(opts: Optional[WriteOptions], epoch) -> WriteOptions:
@@ -475,7 +496,9 @@ class TideDB:
 
     # ---------------------------------------------------------------- reads
     def _cache_key(self, ks_id: int, key: bytes) -> bytes:
-        return bytes([ks_id]) + key
+        # Two bytes cover the whole u16 id space (incl. the 0xFFFF
+        # __system sentinel); one byte would alias ids 256 apart.
+        return ks_id.to_bytes(2, "big") + key
 
     def min_live(self) -> int:
         """Current visibility floor; pass as ``ReadOptions.min_live_pin``

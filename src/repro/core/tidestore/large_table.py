@@ -144,18 +144,36 @@ class LargeTable:
 
     def __init__(self, keyspaces: list[KeyspaceConfig], index_pread,
                  metrics: Optional[Metrics] = None,
-                 blob_cache_bytes: int = 8 * 1024 * 1024):
+                 blob_cache_bytes: int = 8 * 1024 * 1024,
+                 reserved=None):
+        """``keyspaces`` get positional ids (list index = ks_id, the stable
+        user contract).  ``reserved`` is an optional list of (ks_id, cfg)
+        pairs with EXPLICIT ids outside the positional range — engine-owned
+        keyspaces (``__system``) whose persisted rows must never re-attach
+        to a user keyspace when the configured list changes across
+        reopens."""
         self.metrics = metrics or Metrics()
         self.keyspaces = [Keyspace(i, cfg, self.metrics)
                           for i, cfg in enumerate(keyspaces)]
         self.by_name = {cfg.name: i for i, cfg in enumerate(keyspaces)}
+        for ks_id, cfg in (reserved or ()):
+            if ks_id < len(keyspaces) or cfg.name in self.by_name:
+                raise ValueError(
+                    f"reserved keyspace {cfg.name!r} (id {ks_id}) collides "
+                    f"with a positional keyspace")
+            self.keyspaces.append(Keyspace(ks_id, cfg, self.metrics))
+            self.by_name[cfg.name] = ks_id
+        self._by_id = {ks.ks_id: ks for ks in self.keyspaces}
         self._index_pread = index_pread        # (pos, n) -> bytes, Index Store
         self.blob_cache = BlobArrayCache(blob_cache_bytes)
         self.mem_entries = 0                   # global residency counter
         self._mem_lock = threading.Lock()
 
     def ks(self, ks_id: int) -> Keyspace:
-        return self.keyspaces[ks_id]
+        return self._by_id[ks_id]
+
+    def has_ks(self, ks_id: int) -> bool:
+        return ks_id in self._by_id
 
     def _bump_mem(self, delta: int) -> None:
         with self._mem_lock:

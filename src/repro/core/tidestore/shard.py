@@ -122,6 +122,10 @@ class ShardedTideDB:
         self._ks_id(name)                    # validate eagerly
         return KeyspaceHandle(self, name)
 
+    def key_len(self, keyspace=0) -> int:
+        """Configured fixed key width; identical across shards."""
+        return self.shards[0].key_len(keyspace)
+
     # --------------------------------------------------------------- reads
     def get(self, key: bytes, keyspace=0,
             opts: Optional[ReadOptions] = None):

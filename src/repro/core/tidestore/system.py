@@ -57,6 +57,12 @@ from .large_table import KeyspaceConfig
 
 SYSTEM_KEYSPACE = "__system"
 SYSTEM_KEY_LEN = 16
+# The reserved keyspace id: the u16 sentinel, never a user list index.  User
+# keyspaces get positional ids (0..n-1); persisting __system rows under a
+# FIXED id means WAL entries and control-region cells written before a
+# keyspace was added/removed can never re-attach to whichever user keyspace
+# now occupies the old index.
+SYSTEM_KS_ID = 0xFFFF
 
 TAG_KEYSPACE_STATS = 1
 TAG_LARGE_VALUES = 2

@@ -16,7 +16,12 @@ loop at the submission edge with a cost-bounded queue:
   ``"backpressure"`` blocks the submitter until the queue drains to the
   *low* watermark (hysteresis: waiters resume in bulk well below the high
   mark, so admission doesn't thrash at the boundary) — no request is ever
-  dropped, the client is simply slowed to the server's pace.
+  dropped, the client is simply slowed to the server's pace.  A request
+  whose cost alone exceeds the low watermark admits once the queue drains
+  to the low watermark (it could never fit *under* it, and waiting for an
+  empty queue would starve it forever under continuous small traffic), so
+  the accounted cost may transiently overshoot the high watermark by one
+  oversized request.
 - ``release`` returns a drained batch's cost in one step, waking waiters
   when the low watermark is crossed.
 
@@ -122,12 +127,19 @@ class AdmissionController:
             # Backpressure: wait for the drain side to pull the queue down
             # to the LOW watermark, then charge.  Hysteresis means a burst
             # of blocked submitters re-admits in bulk instead of one-per-
-            # release ping-pong at the high mark.
+            # release ping-pong at the high mark.  An OVERSIZED request
+            # (cost > low) could never satisfy the hysteresis predicate, so
+            # it admits as soon as the queue itself drains to the low
+            # watermark — under continuous small traffic the queue may
+            # never empty, and requiring that would starve the large
+            # submitter forever.  The charge may transiently overshoot the
+            # high watermark (an oversized request has to land somewhere);
+            # everyone behind it then waits for the drain.
             self.waits += 1
             t0 = time.monotonic()
             ok = self._cond.wait_for(
                 lambda: self._queued_cost + cost <= low
-                or self._queued_cost == 0.0,
+                or (cost > low and self._queued_cost <= low),
                 timeout=self.cfg.max_wait_s)
             self.wait_time_s += time.monotonic() - t0
             if not ok:

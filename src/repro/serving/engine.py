@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tidestore.api import WriteBatch
+from repro.core.tidestore.system import SYSTEM_KEYSPACE
 from repro.models import serve as serve_mod
 from repro.models.base import ModelConfig
 from repro.serving.admission import AdmissionController
@@ -54,34 +55,45 @@ class Request:
 
 @dataclasses.dataclass
 class KvRead:
-    """A pending batched read; ``value``/``found`` are set once served."""
+    """A pending batched read; ``value``/``found`` are set once served.
+    ``error`` carries the serve-stage exception when the engine failed this
+    request — it's done (the submitter never hangs) but ``result()``
+    re-raises."""
     key: bytes
     keyspace: int = 0
     op: str = "get"                     # "get" | "exists"
     value: Optional[bytes] = None
     found: Optional[bool] = None
     done: bool = False
+    error: Optional[BaseException] = None
     t_submit: float = dataclasses.field(default_factory=time.time)
     t_done: Optional[float] = None
 
     def result(self):
+        if self.error is not None:
+            raise self.error
         return self.found if self.op == "exists" else self.value
 
 
 @dataclasses.dataclass
 class KvWrite:
     """A pending batched write; ``pos`` (the WAL position — per-shard when
-    the engine is sharded) is set once the step's ``write_batch`` lands."""
+    the engine is sharded) is set once the step's ``write_batch`` lands.
+    ``error`` carries the serve-stage exception when the engine failed this
+    request; ``result()`` re-raises it."""
     key: bytes
     value: Optional[bytes] = None       # None for deletes
     keyspace: int = 0
     op: str = "put"                     # "put" | "delete"
     pos: Optional[int] = None
     done: bool = False
+    error: Optional[BaseException] = None
     t_submit: float = dataclasses.field(default_factory=time.time)
     t_done: Optional[float] = None
 
     def result(self):
+        if self.error is not None:
+            raise self.error
         return self.pos
 
 
@@ -135,6 +147,17 @@ class KvBatchServer:
         self.prune_scanned = 0
         self._lock = threading.Lock()
         self.queue: collections.deque = collections.deque()
+        self._closed = False
+        # The engine's reserved keyspace id, resolved once: writes to it
+        # must be rejected at SUBMIT time — letting them reach step() would
+        # fail the whole drained stage for every other client.
+        self._reserved_ks = None
+        norm = getattr(db, "_ks_id", None)
+        if norm is not None:
+            try:
+                self._reserved_ks = norm(SYSTEM_KEYSPACE)
+            except Exception:       # engine without a __system keyspace
+                self._reserved_ks = None
         self.batches_served = 0
         self.keys_served = 0
         self.exists_served = 0
@@ -144,13 +167,23 @@ class KvBatchServer:
         # (engine-side disk bytes come from db.stats()).
         self.write_stages = 0
         self.write_bytes = 0
+        self.serve_errors = 0           # failed stages (requests got .error)
 
     def _submit(self, req):
+        if self._closed:
+            raise RuntimeError("KvBatchServer is closed")
         # Validate the keyspace here so a bad spelling raises to the
-        # submitter instead of poisoning a whole drained batch in step().
+        # submitter instead of poisoning a whole drained batch in step() —
+        # and reject writes to the engine-maintained reserved keyspace
+        # before any admission cost is charged or queue slot taken.
         norm = getattr(self.db, "_ks_id", None)
         if norm is not None:
-            norm(req.keyspace)
+            ks_id = norm(req.keyspace)
+            if (isinstance(req, KvWrite) and self._reserved_ks is not None
+                    and ks_id == self._reserved_ks):
+                raise ValueError(
+                    f"keyspace {SYSTEM_KEYSPACE!r} is read-only: its rows "
+                    f"are maintained by the engine's StatsCollector")
         if self.admission is not None:
             # Charge BEFORE enqueueing: a shed request never enters the
             # queue, a backpressured submitter blocks here.  The charged
@@ -218,14 +251,28 @@ class KvBatchServer:
                 stages.append((is_write, [r], {rk}))
         served = 0
         for is_write, ops, _ in stages:
-            served += (self._serve_writes(ops) if is_write
-                       else self._serve_reads(ops))
-            # Return each served stage's admission cost promptly so
-            # backpressured submitters wake as soon as the drain crosses
-            # the low watermark, not only at step end.
-            if self.admission is not None:
-                self.admission.release(
-                    sum(getattr(r, "_cost", 0.0) for r in ops))
+            try:
+                served += (self._serve_writes(ops) if is_write
+                           else self._serve_reads(ops))
+            except Exception as exc:
+                # A failing stage (I/O error, engine validation) must not
+                # poison the loop: every not-yet-served request in it
+                # completes with the error attached (result() re-raises to
+                # that submitter), the other stages still serve.
+                now = time.time()
+                for r in ops:
+                    if not r.done:
+                        r.error, r.done, r.t_done = exc, True, now
+                self.serve_errors += 1
+                served += len(ops)
+            finally:
+                # Return each stage's admission cost promptly — success or
+                # failure — so backpressured submitters wake as soon as the
+                # drain crosses the low watermark, and a failing stage never
+                # leaks budget (a leak would permanently shrink capacity).
+                if self.admission is not None:
+                    self.admission.release(
+                        sum(getattr(r, "_cost", 0.0) for r in ops))
             # One bounded relocation slice between serving stages: the
             # slice scans at most PruneOptions.batch_records WAL records
             # and re-appends survivors through one append_many, so a stage
@@ -329,6 +376,26 @@ class KvBatchServer:
                 break
         return total
 
+    def close(self) -> int:
+        """Stop accepting submissions and fail every still-queued request
+        (``result()`` raises ``RuntimeError``), releasing their admission
+        costs so blocked backpressure submitters wake instead of waiting on
+        budget that will never drain.  Returns the number of requests
+        discarded.  The engine itself is NOT closed (the server doesn't own
+        it)."""
+        self._closed = True
+        with self._lock:
+            dropped = list(self.queue)
+            self.queue.clear()
+        exc = RuntimeError("KvBatchServer closed before serving request")
+        now = time.time()
+        for r in dropped:
+            r.error, r.done, r.t_done = exc, True, now
+        if self.admission is not None:
+            self.admission.release(
+                sum(getattr(r, "_cost", 0.0) for r in dropped))
+        return len(dropped)
+
     def stats(self) -> dict:
         with self._lock:                 # consistent vs concurrent submitters
             queued = len(self.queue)
@@ -346,6 +413,7 @@ class KvBatchServer:
                                if self.batches_served else 0.0),
                 "prune_steps": self.prune_steps,
                 "prune_scanned": self.prune_scanned,
+                "serve_errors": self.serve_errors,
                 "queued": queued,
                 **(self.admission.stats() if self.admission is not None
                    else {})}

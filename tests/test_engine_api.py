@@ -91,6 +91,31 @@ class TestKeyspaceHandle:
             with pytest.raises(KeyError):
                 db.keyspace("nope")
 
+    def test_scan_prefix_covers_wide_keys_with_ff_suffix(self, tmpdir):
+        """The probe pads out to the keyspace's key width: with a fixed
+        64-byte pad, a 96-byte key whose suffix starts with 0xff bytes
+        compares ABOVE the probe and the walk silently misses it."""
+        cfg = small_cfg(keyspaces=[KeyspaceConfig(
+            "wide", key_len=96, n_cells=4, dirty_flush_threshold=64)])
+        with TideDB(tmpdir, cfg) as db:
+            assert db.key_len("wide") == 96
+            h = db.keyspace("wide")
+            worst = b"pp" + b"\xff" * 94      # all-0xff suffix, full width
+            low = b"pp" + b"\x00" * 94
+            mid = b"pp" + b"\xff" * 40 + b"\x00" * 54
+            other = b"qq" + b"\x7f" * 94
+            for k in (worst, low, mid, other):
+                h.put(k, b"v:" + k[:4])
+            got = h.scan_prefix(b"pp")
+            assert [k for k, _ in got] == [low, mid, worst]
+        shutil.rmtree(tmpdir)
+        with ShardedTideDB(tmpdir, cfg, n_shards=2) as sdb:
+            assert sdb.key_len("wide") == 96
+            h = sdb.keyspace("wide")
+            for k in (worst, low, mid, other):
+                h.put(k, b"v:" + k[:4])
+            assert [k for k, _ in h.scan_prefix(b"pp")] == [low, mid, worst]
+
     def test_engines_satisfy_protocol(self, tmpdir, tmpdir2):
         with TideDB(tmpdir, small_cfg()) as db:
             assert isinstance(db, Engine)

@@ -13,8 +13,9 @@ from repro.core.tidestore import (CopyPool, DbConfig, KeyspaceConfig,
                                   SYSTEM_KEYSPACE, ShardedTideDB, TideDB,
                                   WriteBatch)
 from repro.core.tidestore.bloom import BloomFilter
-from repro.core.tidestore.system import (TAG_LARGE_VALUES, CopierGovernor,
-                                         decode_row_key, row_key, scan_rows)
+from repro.core.tidestore.system import (SYSTEM_KS_ID, TAG_LARGE_VALUES,
+                                         CopierGovernor, decode_row_key,
+                                         row_key, scan_rows)
 from repro.core.tidestore.wal import WalConfig
 
 
@@ -78,7 +79,7 @@ class TestReservedKeyspace:
             db.keyspace(SYSTEM_KEYSPACE).multi_get([k])
 
     def test_user_keyspace_ids_are_stable(self, tmpdir):
-        """__system rides at the END of the list: user ks_ids keep their
+        """__system lives at the FIXED sentinel id: user ks_ids keep their
         positional meaning, and system_stats=False still reserves it."""
         cfg = small_cfg(keyspaces=[KeyspaceConfig("a", n_cells=8),
                                    KeyspaceConfig("b", n_cells=8)],
@@ -86,10 +87,45 @@ class TestReservedKeyspace:
         with TideDB(tmpdir, cfg) as db:
             assert db._ks_id("a") == 0
             assert db._ks_id("b") == 1
-            assert db._ks_id(SYSTEM_KEYSPACE) == 2
+            assert db._ks_id(SYSTEM_KEYSPACE) == SYSTEM_KS_ID
             assert db.system is None           # observer gated off
             # ... but the keyspace still exists for replay compatibility
             assert db.keyspace(SYSTEM_KEYSPACE) is not None
+
+    def test_system_rows_survive_keyspace_addition(self, tmpdir):
+        """The review scenario the sentinel id exists for: persist system
+        rows, then reopen with an EXTRA user keyspace.  Under a positional
+        id the new keyspace would inherit __system's WAL entries and cell
+        pointers; with the sentinel, __system keeps its history and the new
+        keyspace starts empty."""
+        ks = keys_n(60)
+        sizes = sizes_n(60)
+        cfg1 = small_cfg(keyspaces=[KeyspaceConfig("a", n_cells=8,
+                                                   dirty_flush_threshold=64)])
+        with TideDB(tmpdir, cfg1) as db:
+            db.put_many([(k, b"x" * s) for k, s in zip(ks, sizes)],
+                        keyspace="a")
+            db.snapshot_now()                 # fold + flush + control region
+        cfg2 = small_cfg(keyspaces=[KeyspaceConfig("a", n_cells=8,
+                                                   dirty_flush_threshold=64),
+                                    KeyspaceConfig("b", n_cells=8,
+                                                   dirty_flush_threshold=64)])
+        with TideDB(tmpdir, cfg2) as db2:
+            # __system kept its history across the config change
+            t = db2.system_tables()
+            assert t["keyspace_stats"]["a"]["puts"] == 60
+            got = [(r["key"], r["size"]) for r in t["large_values"]["a"]]
+            want = sorted(zip(ks, sizes), key=lambda kv: (-kv[1], kv[0]))[:8]
+            assert got == want
+            # ... and the new keyspace did NOT inherit the system rows
+            sys_rows = db2.keyspace(SYSTEM_KEYSPACE).scan_prefix(b"")
+            assert sys_rows, "system rows still readable"
+            for key, _ in sys_rows:
+                assert db2.get(key, keyspace="b") is None
+            assert db2.prev(b"\xff" * 16, keyspace="b") is None
+            # user data in "a" is untouched
+            assert db2.multi_get(ks, keyspace="a") == \
+                [b"x" * s for s in sizes]
 
 
 # ---------------------------------------------------------------- tables
