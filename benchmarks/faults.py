@@ -1,0 +1,306 @@
+"""Fault-schedule fuzz + integrity gates (robustness tier).
+
+Three correctness gates, no timing targets:
+
+1. **Durability fuzz** — N seeded random fault schedules (``FaultyIo``
+   injecting EIO / ENOSPC / short / torn writes / latency into the WAL's
+   pwrite/pwritev/fsync call stream) drive a mixed workload of puts,
+   deletes, sync flushes, and relocation slices.  After a simulated crash
+   (``db.crash()``) and a clean reopen, every sync-acknowledged write must
+   read back as its acknowledged-or-later version and no reader may ever
+   observe a torn value.
+2. **Scrub detection** — corruptions planted at known sealed-segment
+   positions while the store is open must ALL be found (and quarantined)
+   by one ``db.scrub()`` pass: detection rate 1.0, no false positives.
+3. **Degraded serving** — a disk that fills mid-batch must flip the store
+   to read-only degraded mode; ``KvBatchServer`` then sheds writes via
+   ``Overloaded`` while continuing to serve reads/exists for everything
+   that landed.
+
+Emits ``BENCH_faults.json`` (schema ``faults/v1``)::
+
+    {
+      "schema": "faults/v1",
+      "fuzz": {"examples": 200, "violations": 0, "acked_total": ...,
+               "degraded_runs": ..., "injected": {"eio": ..., ...}},
+      "scrub": {"planted": ..., "found": ..., "false_positives": 0,
+                "detection_rate": 1.0},
+      "degraded_serving": {"degraded": true, "reads_served": ...,
+                           "writes_shed": ..., "writes_failed": ...}
+    }
+
+``python -m benchmarks.faults --smoke`` runs all three gates and exits
+non-zero unless the invariant held on every schedule, the scrubber found
+100% of planted corruptions, and the degraded store kept serving reads.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import random
+import shutil
+import tempfile
+
+from repro.core.tidestore import (DbConfig, DegradedError, FaultRule,
+                                  FaultyIo, KeyspaceConfig, TideDB,
+                                  random_schedule)
+from repro.core.tidestore.wal import HEADER_SIZE, WalConfig
+
+
+def _cfg(io=None, cache_bytes=1 * 1024 * 1024):
+    return DbConfig(
+        keyspaces=[KeyspaceConfig("default", n_cells=16,
+                                  dirty_flush_threshold=64)],
+        wal=WalConfig(segment_size=16 * 1024, background=False),
+        index_wal=WalConfig(segment_size=1 * 1024 * 1024, background=False),
+        background_snapshots=False,
+        cache_bytes=cache_bytes,
+        copy_threads=0,              # in-line copies: deterministic fault order
+        io=io,
+    )
+
+
+def _keys(n, tag=""):
+    return [hashlib.sha256(f"{tag}{i}".encode()).digest() for i in range(n)]
+
+
+# ------------------------------------------------------------------ gate 1
+def _fuzz_one(seed: int, n_ops: int = 60, n_keys: int = 24) -> dict:
+    """One seeded schedule through put/delete/flush/prune; crash; verify.
+
+    Ack bookkeeping: a successful ``db.flush()`` acknowledges every version
+    written so far.  Post-crash the replayed value for a key must be one of
+    the versions written at-or-after its last acknowledged version (the ack
+    is durable; a later non-acked write may legally have landed in full) —
+    anything else is a lost ack or a torn read."""
+    rules = random_schedule(seed)
+    io = FaultyIo(rules, seed=seed)
+    keys = _keys(n_keys, f"fz{seed}")
+    rng = random.Random(seed ^ 0x5EED)
+    d = tempfile.mkdtemp(prefix="bench-faults-")
+    violations = []
+    try:
+        db = TideDB(d, _cfg(io=io))
+        history = {k: [] for k in keys}      # key -> [(op_idx, value|None)]
+        last_ack = {}                        # key -> op_idx of last acked ver
+        acked = 0
+        degraded = False
+        for i in range(n_ops):
+            k = keys[rng.randrange(n_keys)]
+            roll = rng.random()
+            try:
+                if roll < 0.60:
+                    v = b"s%d-op%d" % (seed, i)
+                    db.put(k, v)
+                    history[k].append((i, v))
+                elif roll < 0.75:
+                    db.delete(k)
+                    history[k].append((i, None))
+                elif roll < 0.90:
+                    db.flush()               # ack point for ALL prior writes
+                    acked += 1
+                    for kk, h in history.items():
+                        if h:
+                            last_ack[kk] = h[-1][0]
+                else:
+                    db.prune_step()          # relocation under faults
+            except DegradedError:
+                degraded = True
+                break
+            except OSError:
+                continue                     # failed op: fate unknown
+        degraded = degraded or db.degraded
+        db.crash()
+
+        db2 = TideDB(d, _cfg())              # clean I/O for verification
+        try:
+            for k in keys:
+                got = db2.get(k)
+                h = history[k]
+                if k in last_ack:
+                    valid = {v for idx, v in h if idx >= last_ack[k]}
+                else:
+                    valid = {v for _, v in h} | {None}
+                if got not in valid:
+                    violations.append(
+                        {"seed": seed, "key": k.hex()[:12],
+                         "got": repr(got)[:40],
+                         "acked_at": last_ack.get(k)})
+        finally:
+            db2.close()
+        return {"seed": seed, "violations": violations,
+                "acked_flushes": acked, "degraded": degraded,
+                "injected": io.injected_counts()}
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def _run_fuzz(n_seeds: int, csv) -> dict:
+    total_inj: dict = {}
+    violations = []
+    acked_total = 0
+    degraded_runs = 0
+    for seed in range(n_seeds):
+        r = _fuzz_one(seed)
+        violations.extend(r["violations"])
+        acked_total += r["acked_flushes"]
+        degraded_runs += int(r["degraded"])
+        for kind, n in r["injected"].items():
+            total_inj[kind] = total_inj.get(kind, 0) + n
+    out = {"examples": n_seeds, "violations": len(violations),
+           "violation_detail": violations[:5],
+           "acked_total": acked_total, "degraded_runs": degraded_runs,
+           "injected": total_inj}
+    csv(f"faults.fuzz,0,{n_seeds} schedules violations={len(violations)} "
+        f"acked={acked_total} degraded_runs={degraded_runs} "
+        f"injected={sum(total_inj.values())} {total_inj}")
+    return out
+
+
+# ------------------------------------------------------------------ gate 2
+def _run_scrub_detection(n_corruptions: int = 8, n_keys: int = 600,
+                         csv=print) -> dict:
+    d = tempfile.mkdtemp(prefix="bench-scrub-")
+    try:
+        db = TideDB(d, _cfg(cache_bytes=0))
+        keys = _keys(n_keys, "scrub")
+        pos = [db.put(k, b"p" * 150) for k in keys]
+        db.flush()
+        wal = db.value_wal
+        seg_size = wal.cfg.segment_size
+        tail_seg = wal.tail // seg_size
+        sealed = [p for p in pos if p // seg_size < tail_seg]
+        rng = random.Random(42)
+        planted = sorted(rng.sample(sealed, n_corruptions))
+        for p in planted:
+            fd = wal._fd(p // seg_size)
+            off = p % seg_size + HEADER_SIZE + 3
+            old = os.pread(fd, 1, off)
+            os.pwrite(fd, bytes([old[0] ^ 0xFF]), off)
+        rep = db.scrub()
+        found = sorted(f["pos"] for f in rep["findings"]
+                       if f["kind"] == "crc")
+        false_pos = len(set(found) - set(planted))
+        quarantined = set(wal.quarantined())
+        db.close()
+        out = {"planted": len(planted), "found": len(set(found)),
+               "false_positives": false_pos,
+               "all_quarantined": set(planted) <= quarantined,
+               "detection_rate": len(set(found) & set(planted))
+                                 / len(planted)}
+        csv(f"faults.scrub,0,detection {out['found']}/{out['planted']} "
+            f"rate={out['detection_rate']:.2f} "
+            f"false_positives={false_pos}")
+        return out
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+# ------------------------------------------------------------------ gate 3
+def _run_degraded_serving(csv=print) -> dict:
+    from repro.serving.admission import Overloaded
+    from repro.serving.engine import KvBatchServer
+    d = tempfile.mkdtemp(prefix="bench-degraded-")
+    try:
+        # The disk "fills up" after a few payload copies and stays full
+        # (count=None); poison-header repairs fail the same way.  A small
+        # max_batch splits the submissions into many write stages, so the
+        # failure lands mid-run: some stages are durably served, then the
+        # store degrades under live traffic.
+        io = FaultyIo([
+            FaultRule(op="pwritev", kind="enospc", after=8, count=None),
+            FaultRule(op="pwrite", kind="enospc", after=8, count=None),
+        ])
+        db = TideDB(d, _cfg(io=io))
+        srv = KvBatchServer(db, max_batch=16)
+        keys = _keys(128, "deg")
+        writes, shed = [], 0
+        for k in keys:
+            try:
+                writes.append((k, srv.submit_put(k, b"v" * 100)))
+            except Overloaded:
+                shed += 1
+            srv.step()
+        while srv.step():
+            pass
+        landed = [k for k, w in writes if w.error is None]
+        failed = len(writes) - len(landed)
+        try:
+            srv.submit_put(keys[0], b"post-degrade")
+        except Overloaded:
+            shed += 1
+        gets = [srv.submit_get(k) for k in landed]
+        ex = [srv.submit_exists(k) for k in landed[:16]]
+        while srv.step():
+            pass
+        reads_served = sum(1 for k, g in zip(landed, gets)
+                           if g.error is None and g.result() == b"v" * 100)
+        exists_served = sum(1 for e in ex if e.error is None and e.result())
+        out = {"degraded": db.degraded,
+               "reason": db.degraded_reason or "",
+               "writes_landed": len(landed), "writes_failed": failed,
+               "writes_shed": shed,
+               "reads_served": reads_served,
+               "reads_expected": len(landed),
+               "exists_served": exists_served}
+        db.crash()
+        csv(f"faults.degraded,0,degraded={out['degraded']} "
+            f"landed={out['writes_landed']} failed={failed} "
+            f"shed={out['writes_shed']} reads={reads_served}/{len(landed)}")
+        return out
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+# ---------------------------------------------------------------- harness
+def run(n_seeds: int = 200, csv=print,
+        json_path: str | None = "BENCH_faults.json") -> dict:
+    report = {
+        "schema": "faults/v1",
+        "fuzz": _run_fuzz(n_seeds, csv),
+        "scrub": _run_scrub_detection(csv=csv),
+        "degraded_serving": _run_degraded_serving(csv=csv),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=1)
+        csv(f"faults.json,0,{json_path}")
+    return report
+
+
+def run_smoke(csv=print) -> bool:
+    """CI gates: durability invariant on every schedule, 100% scrub
+    detection with zero false positives, and a full disk leaves a
+    read-serving (write-shedding) store."""
+    report = run(n_seeds=200, csv=csv, json_path="BENCH_faults.json")
+    fz, sc, dg = (report["fuzz"], report["scrub"],
+                  report["degraded_serving"])
+    invariant = fz["violations"] == 0 and fz["acked_total"] > 0 \
+        and sum(fz["injected"].values()) > 0
+    detection = (sc["detection_rate"] == 1.0 and sc["false_positives"] == 0
+                 and sc["all_quarantined"])
+    serving = (dg["degraded"] and dg["writes_shed"] > 0
+               and dg["reads_served"] == dg["reads_expected"]
+               and dg["reads_served"] > 0)
+    ok = invariant and detection and serving
+    csv(f"faults.smoke,0,{'ok' if ok else 'FAIL'} "
+        f"(invariant={invariant} detection={detection} serving={serving})")
+    return ok
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="200 seeded fault schedules + scrub detection + "
+                         "degraded serving; exit 1 unless every "
+                         "acknowledged write survived crash+reopen, all "
+                         "planted corruptions were found, and the "
+                         "degraded store kept serving reads")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(0 if run_smoke() else 1)
+    run()

@@ -15,14 +15,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: kv,kvbatch,kvshard,kvwrite,"
-                         "kvexists,reloc,index,recovery,overload,system,"
-                         "validator,kernels,roofline")
+                         "kvexists,reloc,index,recovery,faults,overload,"
+                         "system,validator,kernels,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (index_formats, kernel_bench, kv_exists, kv_throughput,
-                   kv_write, overload, recovery, relocation, roofline_report,
-                   system_keyspace, validator_sim)
+    from . import (faults, index_formats, kernel_bench, kv_exists,
+                   kv_throughput, kv_write, overload, recovery, relocation,
+                   roofline_report, system_keyspace, validator_sim)
 
     suites = [
         ("kv", kv_throughput.run),          # Figures 1, 6, 7, 8
@@ -33,6 +33,7 @@ def main() -> None:
         ("reloc", relocation.run),          # Figure 9
         ("index", index_formats.run),       # Figure 10 / §6.3
         ("recovery", recovery.run),         # §3.3–3.4
+        ("faults", faults.run),             # fault fuzz + scrub + degraded
         ("overload", overload.run),         # admission control loop
         ("system", system_keyspace.run),    # __system observation overhead
         ("validator", validator_sim.run),   # §6.4 (Sui stand-in)

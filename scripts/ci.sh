@@ -37,13 +37,23 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kv_exists --smoke
 # Reclamation smoke: under churn with live foreground traffic, segments
 # must actually drop, the final span must shrink vs the no-reclamation
 # baseline, and foreground put_many throughput must hold >= 0.8x of it
-# (best-of-2 per mode so one slow run on a loaded runner can't flake).
+# scaled by the runner's own noise floor (the spread between the two
+# identical OFF-mode runs), so a loaded runner can't flake the gate.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.relocation --smoke
 
 # Recovery smoke: correctness gates only (no timing) — reopen across a
 # pruned mid-log hole after a crash, and fall back to the rotated control
 # region when control.bin is torn.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.recovery --smoke
+
+# Faults smoke: 200 seeded fault schedules (EIO/ENOSPC/short/torn/latency
+# injected into the WAL's write path, including flush and relocation
+# slices) — every sync-acknowledged write must survive crash+reopen and no
+# torn value may ever be served; the scrubber must find 100% of planted
+# sealed-segment corruptions with zero false positives; a disk that fills
+# mid-run must leave a read-only degraded store that still serves reads
+# through KvBatchServer while shedding writes.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.faults --smoke
 
 # Overload smoke: under 4x sustained overload the admission controller must
 # keep queue depth and accounted cost at/below the watermark while the

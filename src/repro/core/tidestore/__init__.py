@@ -3,10 +3,15 @@ from .api import (Engine, KeyspaceHandle, PruneOptions, ReadOptions,
                   WriteBatch, WriteOptions)
 from .cache import BlobArrayCache, LruCache
 from .db import DbConfig, TideDB
+from .faults import (CorruptionError, DegradedError, FaultRule, FaultyIo,
+                     IoBackend, KeyWidthError, TornRecordError,
+                     UnrepairedHoleError, WalHoleError, WalReadError,
+                     random_schedule)
 from .index import (HeaderLookup, OptimisticLookup, serialize_header,
                     serialize_optimistic)
 from .large_table import CellState, KeyspaceConfig, LargeTable
 from .relocate import Decision, PruneController, PruneThread, Relocator
+from .scrub import Scrubber, ScrubThread, read_scrub_table
 from .shard import ShardedTideDB
 from .system import (SYSTEM_KEYSPACE, SYSTEM_KS_ID, CopierGovernor,
                      StatsCollector,
@@ -26,4 +31,8 @@ __all__ = [
     "SYSTEM_KEYSPACE", "SYSTEM_KS_ID", "StatsCollector", "CopierGovernor",
     "read_tables",
     "row_key", "decode_row_key", "system_keyspace_config",
+    "IoBackend", "FaultyIo", "FaultRule", "random_schedule",
+    "WalReadError", "CorruptionError", "TornRecordError", "WalHoleError",
+    "UnrepairedHoleError", "DegradedError", "KeyWidthError",
+    "Scrubber", "ScrubThread", "read_scrub_table",
 ]

@@ -348,6 +348,10 @@ class Engine(Protocol):
 
     def prune_epochs_below(self, epoch: int) -> int: ...
 
+    def scrub(self) -> dict: ...
+
+    def scrub_step(self, max_segments: int = 1) -> int: ...
+
     def min_live(self) -> int: ...
 
     def flush(self) -> None: ...

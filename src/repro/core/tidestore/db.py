@@ -11,23 +11,31 @@ else optimistic point-lookup into the Index Store) → Value WAL read.
 """
 from __future__ import annotations
 
+import errno
 import os
 import threading
+import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field, replace
 from typing import Optional
 
+import msgpack
+
 from .api import (KeyspaceHandle, PruneOptions, ReadOptions, WriteBatch,
                   WriteOptions, coerce_batch)
 from .cache import LruCache
+from .faults import (DEFAULT_IO, DegradedError, IoBackend, KeyWidthError,
+                     UnrepairedHoleError)
 from .flush import Flusher
 from .index import TOMB_FLAG, is_tombstone, real_pos
 from .large_table import CellState, KeyspaceConfig, LargeTable
 from .relocate import PruneController, PruneThread, Relocator
+from .scrub import Scrubber, ScrubThread
 from .snapshot import (SnapshotThread, capture_state, read_control_region,
                        write_control_region)
-from .system import (SYSTEM_KEYSPACE, SYSTEM_KS_ID, CopierGovernor,
-                     StatsCollector, read_tables, system_keyspace_config)
+from .system import (SYSTEM_KEYSPACE, SYSTEM_KS_ID, TAG_HEALTH,
+                     CopierGovernor, StatsCollector, read_tables, row_key,
+                     system_keyspace_config)
 from .util import Metrics
 from .wal import (_ENTRY_HDR, HEADER_SIZE, T_ENTRY, T_INDEX, T_TOMBSTONE,
                   CopyPool, Wal, WalConfig, decode_entry, decode_tombstone,
@@ -89,6 +97,10 @@ class DbConfig:
                                            # keyspace itself always exists)
     system_top_n: int = 8                  # rows per __system ranking table
     system_sample: int = 8                 # 1-in-N read-traffic sampling
+    io: Optional[IoBackend] = None         # os-call seam; None = real I/O
+                                           # (tests inject faults.FaultyIo)
+    scrub: bool = False                    # background CRC scrub thread
+    scrub_interval_s: float = 5.0          # one scrub_step per interval
 
 
 class TideDB:
@@ -98,6 +110,14 @@ class TideDB:
         self.cfg = config or DbConfig()
         os.makedirs(path, exist_ok=True)
         self.metrics = Metrics()
+        self._io = self.cfg.io or DEFAULT_IO
+
+        # Degraded mode: unrecoverable write failures (ENOSPC, an
+        # unrepairable poison backlog) flip the store to explicit read-only
+        # instead of wedging — reads keep serving, writes raise
+        # DegradedError, and health is visible in stats()/__system.
+        self._health_lock = threading.Lock()
+        self._degraded_reason: Optional[str] = None
 
         # The reserved __system keyspace (self-observation tables) lives at
         # the FIXED sentinel id SYSTEM_KS_ID (0xFFFF), never a position in
@@ -144,9 +164,9 @@ class TideDB:
             self._copy_pool = copy_pool
             self._owns_copy_pool = False
         self.value_wal = Wal(path, "value", self.cfg.wal, self.metrics,
-                             copy_pool=self._copy_pool)
+                             copy_pool=self._copy_pool, io=self._io)
         self.index_wal = Wal(path, "index", self.cfg.index_wal, self.metrics,
-                             copy_pool=self._copy_pool)
+                             copy_pool=self._copy_pool, io=self._io)
         self.table = LargeTable(
             self.cfg.keyspaces, self.index_wal.pread, self.metrics,
             blob_cache_bytes=self.cfg.blob_cache_bytes,
@@ -155,6 +175,9 @@ class TideDB:
         self.flusher = Flusher(self.table, self.index_wal, self.value_wal,
                                self.cfg.flusher_threads, self.metrics,
                                persist_filters=self.cfg.persist_filters)
+        # Background flushes have no caller to raise to: unrecoverable I/O
+        # failures there must still degrade the store.
+        self.flusher.on_error = self._note_write_failure
         prune_opts = self.cfg.prune or PruneOptions()
         self.relocator = Relocator(self.table, self.value_wal, self.metrics,
                                    batch_records=prune_opts.batch_records,
@@ -175,6 +198,9 @@ class TideDB:
             self.flusher.collector = self.system
             self.system.load()
 
+        # Corruption scrubber (integrity subsystem): always constructed so
+        # scrub()/scrub_step() work on demand; the thread is opt-in.
+        self.scrubber = Scrubber(self)
         self._snapshot_thread = None
         if self.cfg.background_snapshots:
             self._snapshot_thread = SnapshotThread(self, self.cfg.snapshot_interval_s)
@@ -184,6 +210,10 @@ class TideDB:
             self._prune_thread = PruneThread(
                 self.prune_controller, self.cfg.relocation_interval_s)
             self._prune_thread.start()
+        self._scrub_thread = None
+        if self.cfg.scrub:
+            self._scrub_thread = ScrubThread(self, self.cfg.scrub_interval_s)
+            self._scrub_thread.start()
 
     # ------------------------------------------------------------- recovery
     def _recover(self) -> None:
@@ -271,11 +301,84 @@ class TideDB:
             self._system_writes.ok = False
 
     def _check_writable(self, ks_id: int) -> None:
-        if ks_id == self._system_ks_id and \
-                not getattr(self._system_writes, "ok", False):
-            raise ValueError(
-                f"keyspace {SYSTEM_KEYSPACE!r} is read-only: its rows are "
-                f"maintained by the engine's StatsCollector")
+        if ks_id == self._system_ks_id:
+            if not getattr(self._system_writes, "ok", False):
+                raise ValueError(
+                    f"keyspace {SYSTEM_KEYSPACE!r} is read-only: its rows "
+                    f"are maintained by the engine's StatsCollector")
+            # Engine-internal rows (stats folds, scrub findings, the health
+            # row) stay best-effort in degraded mode: they may still fail at
+            # the device, but the gate must not block the diagnosis.
+            return
+        if self._degraded_reason is not None:
+            raise DegradedError(self._degraded_reason)
+
+    def _check_keys(self, ks_id: int, keys) -> None:
+        """Reject wrong-width keys at the write entrypoint with a typed
+        error.  Index blobs are fixed-width (``build_sorted_blob`` reshapes
+        to ``key_len``), so a mismatched key accepted here would later kill
+        the *background* flush — long after the write was acknowledged.
+        Reads stay width-tolerant (prefix-scan probes are deliberately
+        longer than ``key_len``)."""
+        klen = self.table.ks(ks_id).cfg.key_len
+        for k in keys:
+            if len(k) != klen:
+                name = self.table.ks(ks_id).cfg.name
+                raise KeyWidthError(
+                    f"key of {len(k)} B in keyspace {name!r}: configured "
+                    f"key_len is {klen} B (index blobs are fixed-width)")
+
+    # ------------------------------------------------------- failure domain
+    @contextmanager
+    def _io_guard(self):
+        """Classify I/O failures escaping a write/flush path: unrecoverable
+        ones transition the store to degraded before re-raising."""
+        try:
+            yield
+        except OSError as e:
+            self._note_write_failure(e)
+            raise
+
+    def _note_write_failure(self, exc: BaseException) -> None:
+        if isinstance(exc, UnrepairedHoleError):
+            self._enter_degraded(str(exc))
+            return
+        en = getattr(exc, "errno", None)
+        if en in (errno.ENOSPC, errno.EDQUOT, errno.EROFS):
+            self._enter_degraded(getattr(exc, "strerror", None) or str(exc))
+
+    def _enter_degraded(self, reason: str) -> None:
+        """Idempotent ok → degraded flip.  Reads keep serving; writes are
+        refused with ``DegradedError``; the transition is counted and a
+        best-effort health row lands in ``__system`` (it may itself fail —
+        the disk is the thing that is broken)."""
+        with self._health_lock:
+            if self._degraded_reason is not None:
+                return
+            self._degraded_reason = reason
+        self.metrics.add(degraded_transitions=1)
+        try:
+            row = msgpack.packb(
+                {"health": "degraded", "reason": reason, "time": time.time()},
+                use_bin_type=True)
+            with self._allow_system_writes():
+                self.put(row_key(TAG_HEALTH, 0, 0), row,
+                         keyspace=self._system_ks_id)
+        except Exception:
+            pass
+
+    @property
+    def health(self) -> str:
+        """"ok" or "degraded" (read-only after an unrecoverable failure)."""
+        return "degraded" if self._degraded_reason is not None else "ok"
+
+    @property
+    def degraded(self) -> bool:
+        return self._degraded_reason is not None
+
+    @property
+    def degraded_reason(self) -> Optional[str]:
+        return self._degraded_reason
 
     def keyspace(self, name) -> KeyspaceHandle:
         """Bind a keyspace once; the handle's methods never re-thread it."""
@@ -318,16 +421,19 @@ class TideDB:
         opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
         self._check_writable(ks_id)
+        self._check_keys(ks_id, (key,))
         payload = self._entry_parts(ks_id, key, value, opts.epoch)
-        pos = self.value_wal.append(T_ENTRY, payload, opts.epoch,
-                                    app_bytes=len(key) + len(value))
+        with self._io_guard():
+            pos = self.value_wal.append(T_ENTRY, payload, opts.epoch,
+                                        app_bytes=len(key) + len(value))
         self.table.apply(ks_id, key, pos)
         self.value_wal.mark_processed(pos, payload_len(payload))
         self.cache.invalidate(self._cache_key(ks_id, key))
         if self.system is not None:
             self.system.note_put(ks_id, key, len(value))
         if opts.durability == "sync":
-            self.value_wal.flush()
+            with self._io_guard():
+                self.value_wal.flush()
         return pos
 
     def delete(self, key: bytes, keyspace=0, epoch: int = 0,
@@ -335,16 +441,19 @@ class TideDB:
         opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
         self._check_writable(ks_id)
+        self._check_keys(ks_id, (key,))
         payload = encode_tombstone(ks_id, key, opts.epoch)
-        pos = self.value_wal.append(T_TOMBSTONE, payload, opts.epoch,
-                                    app_bytes=len(key))
+        with self._io_guard():
+            pos = self.value_wal.append(T_TOMBSTONE, payload, opts.epoch,
+                                        app_bytes=len(key))
         self.table.apply(ks_id, key, TOMB_FLAG | pos)
         self.value_wal.mark_processed(pos, len(payload))
         self.cache.invalidate(self._cache_key(ks_id, key))
         if self.system is not None:
             self.system.note_delete_many(ks_id, (key,))
         if opts.durability == "sync":
-            self.value_wal.flush()
+            with self._io_guard():
+                self.value_wal.flush()
         return pos
 
     def _write_many(self, ks_id: int, records, keys, marker_of,
@@ -359,10 +468,11 @@ class TideDB:
         flow (§3.1 steps 1–4); ``append_many`` returns only after every
         copy completes, so markers are applied for fully-written records
         only, and the sync flush rides the WAL's completion latch."""
-        positions = self.value_wal.append_many(records, opts.epoch,
-                                               app_bytes=app_bytes,
-                                               epochs=epochs,
-                                               parallel=opts.parallel_copy)
+        with self._io_guard():
+            positions = self.value_wal.append_many(records, opts.epoch,
+                                                   app_bytes=app_bytes,
+                                                   epochs=epochs,
+                                                   parallel=opts.parallel_copy)
         self.table.apply_many(
             [(ks_id, key, marker_of(pos))
              for key, pos in zip(keys, positions)])
@@ -371,7 +481,8 @@ class TideDB:
         self.cache.invalidate_many(
             [self._cache_key(ks_id, k) for k in keys])
         if opts.durability == "sync":
-            self.value_wal.flush()
+            with self._io_guard():
+                self.value_wal.flush()
         return positions
 
     def put_many(self, items, keyspace=0, epoch: int = 0,
@@ -398,6 +509,7 @@ class TideDB:
         opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
         self._check_writable(ks_id)
+        self._check_keys(ks_id, (it[0] for it in items))
         if self.system is not None:
             self.system.note_put_many(ks_id, items)
         records, app_bytes = [], 0
@@ -430,6 +542,7 @@ class TideDB:
         opts = self._wopts(opts, epoch)
         ks_id = self._ks_id(keyspace)
         self._check_writable(ks_id)
+        self._check_keys(ks_id, keys)
         if self.system is not None:
             self.system.note_delete_many(ks_id, keys)
         if epochs is not None:
@@ -463,6 +576,7 @@ class TideDB:
                 _, ks, key, value = op
                 ks_id = self._ks_id(ks)
                 self._check_writable(ks_id)
+                self._check_keys(ks_id, (key,))
                 subrecords.append((T_ENTRY, self._entry_parts(
                     ks_id, key, value, opts.epoch)))
                 metas.append((ks_id, key, False))
@@ -473,6 +587,7 @@ class TideDB:
                 _, ks, key = op
                 ks_id = self._ks_id(ks)
                 self._check_writable(ks_id)
+                self._check_keys(ks_id, (key,))
                 subrecords.append((T_TOMBSTONE,
                                    encode_tombstone(ks_id, key, opts.epoch)))
                 metas.append((ks_id, key, True))
@@ -481,8 +596,9 @@ class TideDB:
                     self.system.note_delete_many(ks_id, (key,))
         if not subrecords:
             return []
-        batch_pos, sub_positions = self.value_wal.append_batch(
-            subrecords, opts.epoch, app_bytes=app_bytes)
+        with self._io_guard():
+            batch_pos, sub_positions = self.value_wal.append_batch(
+                subrecords, opts.epoch, app_bytes=app_bytes)
         self.table.apply_many(
             [(ks_id, key, (TOMB_FLAG | pos) if is_del else pos)
              for (ks_id, key, is_del), pos in zip(metas, sub_positions)])
@@ -491,7 +607,8 @@ class TideDB:
         body_len = sum(HEADER_SIZE + payload_len(p) for _, p in subrecords)
         self.value_wal.mark_processed(batch_pos, body_len)
         if opts.durability == "sync":
-            self.value_wal.flush()
+            with self._io_guard():
+                self.value_wal.flush()
         return sub_positions
 
     # ---------------------------------------------------------------- reads
@@ -702,7 +819,8 @@ class TideDB:
             gov.maybe_adjust()
         self.flusher.flush_dirty(threshold=flush_threshold, wait=True)
         state = capture_state(self.table, self.value_wal, self.index_wal)
-        write_control_region(self.path, state)
+        with self._io_guard():
+            write_control_region(self.path, state, self._io)
         min_idx = self.table.min_index_store_pos()
         if min_idx is not None:
             # One-segment slack so in-flight readers of just-replaced blobs
@@ -725,8 +843,9 @@ class TideDB:
     def flush(self) -> None:
         """Strong durability point: everything fsynced + control updated."""
         self.snapshot_now(flush_threshold=1)
-        self.value_wal.flush()
-        self.index_wal.flush()
+        with self._io_guard():
+            self.value_wal.flush()
+            self.index_wal.flush()
 
     def prune_epochs_below(self, epoch: int) -> int:
         return self.relocator.prune_epochs_below(epoch)
@@ -744,19 +863,60 @@ class TideDB:
         serving stages.  Returns records scanned (0 = nothing to do)."""
         return self.prune_controller.step(opts)
 
+    # ------------------------------------------------------------ integrity
+    def scrub(self) -> dict:
+        """One full CRC-verification pass over every sealed WAL segment;
+        returns the report (findings, corruption count, records checked)
+        and publishes it into ``__system`` (tag TAG_SCRUB)."""
+        return self.scrubber.run()
+
+    def scrub_step(self, max_segments: int = 1) -> int:
+        """One bounded scrub slice (``KvBatchServer`` idle-tick unit);
+        returns records verified."""
+        return self.scrubber.step(max_segments)
+
     def close(self, flush: bool = True) -> None:
         if self._closed:
             return
         self._closed = True
         if self._prune_thread:
             self._prune_thread.stop()
+        if self._scrub_thread:
+            self._scrub_thread.stop()
         if self._snapshot_thread:
             self._snapshot_thread.stop()
         if flush:
-            self.flush()
+            try:
+                self.flush()
+            except OSError:
+                # A degraded store can't make new durability promises at
+                # close; the failure already surfaced to a writer.
+                if not self.degraded:
+                    raise
         self.flusher.close()
         self.value_wal.close()
         self.index_wal.close()
+        if self._owns_copy_pool:
+            self._copy_pool.close()
+
+    def crash(self) -> None:
+        """Simulate kill -9 for crash-consistency tests: tear down threads
+        and descriptors WITHOUT flushing, snapshotting, or repairing
+        anything — the on-disk state is exactly what the OS already holds.
+        A subsequent ``TideDB(path)`` exercises real recovery."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._prune_thread:
+            self._prune_thread.stop()
+        if self._scrub_thread:
+            self._scrub_thread.stop()
+        if self._snapshot_thread:
+            self._snapshot_thread.stop()
+        self.flusher.pool.shutdown(wait=False, cancel_futures=True)
+        self.flusher._closed = True
+        self.value_wal.abandon()
+        self.index_wal.abandon()
         if self._owns_copy_pool:
             self._copy_pool.close()
 
@@ -768,6 +928,9 @@ class TideDB:
             wal_live_bytes=self.value_wal.tail - self.value_wal.first_live_pos,
             mem_entries=self.table.mem_entries,
             copy_pool_threads=self._copy_pool.threads,
+            health=self.health,
+            degraded_reason=self._degraded_reason or "",
+            quarantine_size=len(self.value_wal.quarantined()),
         )
         return s
 

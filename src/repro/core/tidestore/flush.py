@@ -36,6 +36,11 @@ class Flusher:
         # events feed the per-keyspace rollups.  Set by TideDB after
         # construction; None = no observation.
         self.collector = None
+        # Optional failure callback (set by TideDB): background flushes run
+        # on pool threads where an exception has no caller to propagate to,
+        # so unrecoverable I/O errors are reported here and can degrade the
+        # store instead of dying in a stack trace.
+        self.on_error = None
         self.pool = ThreadPoolExecutor(max_workers=n_threads,
                                        thread_name_prefix="tide-flusher")
         self._closed = False
@@ -60,11 +65,21 @@ class Flusher:
     def _safe_flush(self, ks_id: int, cell: Cell) -> None:
         try:
             self.flush_cell(ks_id, cell)
-        except Exception:  # pragma: no cover - surfaced via logs in prod
-            import traceback
-            traceback.print_exc()
+        except Exception as e:
+            # I/O errors with a registered handler are *expected* failures
+            # (disk full, injected faults): the handler classifies them and
+            # degrades the store if terminal — no stack-trace spam.  Logic
+            # bugs (anything else) still print in full.
+            if not (isinstance(e, OSError) and self.on_error is not None):
+                import traceback
+                traceback.print_exc()
             with self.table.ks(ks_id).row_lock(cell.cell_id):
                 cell.flushing = False
+            if self.on_error is not None:
+                try:
+                    self.on_error(e)
+                except Exception:
+                    pass
 
     # ------------------------------------------------------------ the work
     def flush_cell(self, ks_id: int, cell: Cell) -> bool:

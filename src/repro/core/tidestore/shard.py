@@ -99,6 +99,7 @@ class ShardedTideDB:
         self._pool = ThreadPoolExecutor(max_workers=threads or n_shards,
                                         thread_name_prefix="tide-shard")
         self._prune_rr = 0
+        self._scrub_rr = 0
         self._closed = False
 
     # ------------------------------------------------------------- routing
@@ -319,18 +320,63 @@ class ShardedTideDB:
         self._prune_rr += 1
         return self.shards[sid].prune_step(opts)
 
+    # ------------------------------------------------------------ integrity
+    @property
+    def health(self) -> str:
+        """``"degraded"`` if ANY shard is degraded: writes hash across all
+        shards, so one read-only shard makes the store's write surface
+        unreliable (a put may or may not land depending on its key)."""
+        return ("degraded" if any(sh.degraded for sh in self.shards)
+                else "ok")
+
+    @property
+    def degraded(self) -> bool:
+        return self.health == "degraded"
+
+    @property
+    def degraded_reason(self):
+        for i, sh in enumerate(self.shards):
+            if sh.degraded:
+                return f"shard {i}: {sh.degraded_reason}"
+        return None
+
+    def scrub(self) -> dict:
+        """One full CRC pass on every shard, fanned across the pool.
+        Findings merge (tagged with their shard id); counters sum."""
+        futures = [self._pool.submit(sh.scrub) for sh in self.shards]
+        out: dict = {"findings": [], "corruptions": 0,
+                     "records_checked": 0, "segments_checked": 0}
+        for sid, f in enumerate(futures):
+            rep = f.result()
+            out["findings"].extend(dict(r, shard=sid)
+                                   for r in rep["findings"])
+            for k in ("corruptions", "records_checked", "segments_checked"):
+                out[k] += rep[k]
+        return out
+
+    def scrub_step(self, max_segments: int = 1) -> int:
+        """One bounded scrub slice, round-robined like ``prune_step``."""
+        sid = self._scrub_rr % self.n_shards
+        self._scrub_rr += 1
+        return self.shards[sid].scrub_step(max_segments)
+
     def clear_caches(self) -> None:
         """Benchmark/test hook: drop every shard's value LRU."""
         for sh in self.shards:
             sh.cache.clear()
 
     def stats(self) -> dict:
-        """Merged counters: numeric values sum across shards."""
+        """Merged counters: numeric values sum across shards.  Health is
+        aggregated explicitly (the numeric merge drops strings): the store
+        is degraded if any shard is, and ``degraded_shards`` counts them."""
         out: dict = {"n_shards": self.n_shards}
         for sh in self.shards:
             for k, v in sh.stats().items():
-                if isinstance(v, (int, float)):
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
                     out[k] = out.get(k, 0) + v
+        out["health"] = self.health
+        out["degraded_shards"] = sum(1 for sh in self.shards if sh.degraded)
+        out["degraded_reason"] = self.degraded_reason or ""
         return out
 
     def system_tables(self) -> dict:

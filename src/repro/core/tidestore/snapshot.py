@@ -16,6 +16,7 @@ from typing import Optional
 
 import msgpack
 
+from .faults import DEFAULT_IO, IoBackend
 from .large_table import CellState, LargeTable
 from .util import Metrics, crc32
 from .wal import Wal
@@ -25,17 +26,32 @@ CONTROL_FALLBACK = CONTROL_FILE + ".1"
 _MAGIC = b"TIDE0001"
 
 
-def write_control_region(path: str, state: dict) -> None:
+def write_control_region(path: str, state: dict,
+                         io: Optional[IoBackend] = None) -> None:
+    io = io or DEFAULT_IO
     body = msgpack.packb(state, use_bin_type=True)
     blob = _MAGIC + struct.pack("<I", crc32(body)) + body
     # unique tmp name: concurrent snapshotters (background thread + an
     # explicit flush) must not clobber each other's rename source
     tmp = os.path.join(path, f"{CONTROL_FILE}.tmp.{os.getpid()}."
                              f"{threading.get_ident()}")
-    with open(tmp, "wb") as f:
-        f.write(blob)
-        f.flush()
-        os.fsync(f.fileno())
+    fd = io.open(tmp, os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o644)
+    try:
+        done = 0
+        while done < len(blob):
+            n = io.pwrite(fd, memoryview(blob)[done:], done)
+            if n <= 0:
+                raise OSError(f"control region pwrite wrote {n} bytes")
+            done += n
+        io.fsync(fd)
+    except OSError:
+        os.close(fd)
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    os.close(fd)
     cur = os.path.join(path, CONTROL_FILE)
     # Rotate the previous snapshot aside before installing the new one:
     # should this write land torn (kernel crash mid-rename aside, a torn
@@ -53,8 +69,13 @@ def write_control_region(path: str, state: dict) -> None:
 def _read_one(fn: str) -> Optional[dict]:
     if not os.path.exists(fn):
         return None
-    with open(fn, "rb") as f:
-        blob = f.read()
+    try:
+        with open(fn, "rb") as f:
+            blob = f.read()
+    except OSError:
+        # An unreadable control file is treated exactly like a torn one:
+        # fall back to the rotated previous snapshot or a full replay.
+        return None
     if len(blob) < 12 or blob[:8] != _MAGIC:
         return None
     (crc,) = struct.unpack_from("<I", blob, 8)

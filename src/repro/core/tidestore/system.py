@@ -67,6 +67,12 @@ SYSTEM_KS_ID = 0xFFFF
 TAG_KEYSPACE_STATS = 1
 TAG_LARGE_VALUES = 2
 TAG_HOT_CELLS = 3
+# Tags 4/5 are written by the integrity subsystem (scrub.py) and the
+# degraded-mode transition; they are deliberately NOT in TABLES — the
+# workload-rollup readers (read_tables / system_tables) keep their shape,
+# and scrub findings have their own reader (scrub.read_scrub_table).
+TAG_SCRUB = 4
+TAG_HEALTH = 5
 TABLES = {"keyspace_stats": TAG_KEYSPACE_STATS,
           "large_values": TAG_LARGE_VALUES,
           "hot_cells": TAG_HOT_CELLS}
@@ -324,11 +330,19 @@ class StatsCollector:
                              for r in range(len(ranked), prev)]
                     self._prev_rows[(tag, ks)] = len(ranked)
             db = self._db
-            with db._allow_system_writes():
-                if rows:
-                    db.put_many(rows, keyspace=self._sys_ks)
-                if dels:
-                    db.delete_many(dels, keyspace=self._sys_ks)
+            try:
+                with db._allow_system_writes():
+                    if rows:
+                        db.put_many(rows, keyspace=self._sys_ks)
+                    if dels:
+                        db.delete_many(dels, keyspace=self._sys_ks)
+            except (OSError, RuntimeError):
+                # Degraded/failing store: stats are best-effort and must
+                # never wedge a snapshot.  Totals live in memory and every
+                # fold rewrites the full rollup, so nothing is lost —
+                # re-arm the dirty flag and try again next fold.
+                self._dirty = True
+                return 0
             db.metrics.add(system_folds=1, system_rows_written=len(rows))
             return len(rows)
 

@@ -121,6 +121,14 @@ class Metrics:
     relocation_cas_fail: int = 0       # relocations lost to a concurrent write
     segments_deleted: int = 0
     segments_pruned: int = 0           # whole segments dropped by epoch expiry
+    crc_failures: int = 0              # payload CRC mismatches on reads
+    quarantined_positions: int = 0     # distinct positions quarantined
+    read_retries: int = 0              # transient read errors retried
+    replay_torn_records: int = 0       # torn payloads skipped during replay
+    scrub_passes: int = 0              # full scrub sweeps completed
+    scrub_records_checked: int = 0     # records CRC-verified by the scrubber
+    scrub_corruptions_found: int = 0   # corrupt records the scrubber flagged
+    degraded_transitions: int = 0      # ok -> degraded (read-only) flips
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def add(self, **kwargs: int) -> None:

@@ -57,6 +57,8 @@ from typing import Callable, Iterator, Optional
 
 import numpy as np
 
+from .faults import (DEFAULT_IO, CorruptionError, IoBackend, TornRecordError,
+                     UnrepairedHoleError, WalHoleError)
 from .util import Metrics, PositionTracker, crc32, crc32_parts
 
 # ``os.pwritev`` is POSIX-only (and absent on some exotic builds); the
@@ -71,19 +73,22 @@ except (AttributeError, OSError, ValueError):
     _IOV_MAX = 1024
 
 
-def write_parts(fd, parts, off: int) -> int:
+def write_parts(fd, parts, off: int, io: Optional[IoBackend] = None) -> int:
     """Positional vectored write: the iovec list is the caller's buffers
     themselves, so record headers and payloads reach the kernel without a
     staging ``b"".join`` copy.  Handles short vectored writes (resume where
     the kernel stopped) and iovec lists longer than ``IOV_MAX``.  Platforms
     without ``os.pwritev`` take the single-``pwrite`` fallback — one staged
-    join, the pre-parallel-copy write path.  Returns bytes written."""
-    if not HAVE_PWRITEV:
+    join, the pre-parallel-copy write path.  All bytes go through ``io``
+    (the fault-injection seam).  Returns bytes written."""
+    if io is None:
+        io = DEFAULT_IO
+    if not HAVE_PWRITEV or not io.have_pwritev:
         buf = parts[0] if len(parts) == 1 else b"".join(parts)
         mv = memoryview(buf)
         done = 0
         while done < len(buf):
-            n = os.pwrite(fd, mv[done:], off + done)
+            n = io.pwrite(fd, mv[done:], off + done)
             if n <= 0:                    # defensive: no forward progress
                 raise OSError(f"pwrite wrote {n} of {len(buf) - done} bytes")
             done += n
@@ -91,7 +96,9 @@ def write_parts(fd, parts, off: int) -> int:
     total = 0
     pending = [p for p in parts if len(p)]
     while pending:
-        n = os.pwritev(fd, pending[:_IOV_MAX], off)
+        n = io.pwritev(fd, pending[:_IOV_MAX], off)
+        if n <= 0:                        # defensive: no forward progress
+            raise OSError(f"pwritev wrote {n} bytes")
         total += n
         off += n
         k = 0
@@ -250,11 +257,13 @@ class Wal:
     def __init__(self, directory: str, name: str, config: WalConfig | None = None,
                  metrics: Metrics | None = None, *,
                  copy_threads: Optional[int] = None,
-                 copy_pool: Optional[CopyPool] = None):
+                 copy_pool: Optional[CopyPool] = None,
+                 io: Optional[IoBackend] = None):
         self.dir = directory
         self.name = name
         self.cfg = config or WalConfig()
         self.metrics = metrics or Metrics()
+        self.io = io or DEFAULT_IO
         os.makedirs(directory, exist_ok=True)
 
         # Payload-copier pool (reserve → parallel copy → commit).  A shared
@@ -281,6 +290,13 @@ class Wal:
         # (see _copy_subrun): flush() must drain this before fsyncing or
         # raise — sync durability is never acknowledged over a hole.
         self._poison_backlog: list[tuple[int, int, bytes]] = []
+
+        # Positions whose payload failed its CRC (latent corruption, not a
+        # benign stale/relocated read): quarantined so repeated lookups of a
+        # known-bad position don't re-pay the read, and so the scrubber and
+        # __system can report them.  {pos: observation count}.
+        self._quarantine_lock = threading.Lock()
+        self._quarantine: dict[int, int] = {}
 
         self._alloc_lock = threading.Lock()
         self._fd_lock = threading.Lock()
@@ -345,9 +361,13 @@ class Wal:
                 return fd
             path = self._segment_path(idx)
             flags = os.O_RDWR | (os.O_CREAT if create else 0)
-            fd = os.open(path, flags, 0o644)
+            fd = self.io.open(path, flags, 0o644)
             if create and self.cfg.preallocate:
-                os.ftruncate(fd, self.cfg.segment_size)
+                try:
+                    self.io.ftruncate(fd, self.cfg.segment_size)
+                except OSError:
+                    os.close(fd)
+                    raise
             self._fds[idx] = fd
             return fd
 
@@ -388,7 +408,8 @@ class Wal:
 
     def _repair_poison_backlog(self) -> None:
         """Retry the poison-header writes a failed copy left behind;
-        raises ``OSError`` if any hole still cannot be repaired."""
+        raises ``UnrepairedHoleError`` if any hole still cannot be
+        repaired (the store-level trigger for degraded mode)."""
         with self._inflight_lock:
             if not self._poison_backlog:
                 return
@@ -396,14 +417,15 @@ class Wal:
         failed = []
         for fd, pos, hdr in backlog:
             try:
-                os.pwrite(fd, hdr, pos)
+                self.io.pwrite(fd, hdr, pos)
             except OSError:
                 failed.append((fd, pos, hdr))
         if failed:
             with self._inflight_lock:
                 self._poison_backlog.extend(failed)
-            raise OSError(f"{len(failed)} unrepaired WAL hole(s): "
-                          "durability cannot be acknowledged")
+            raise UnrepairedHoleError(
+                f"{len(failed)} unrepaired WAL hole(s): "
+                "durability cannot be acknowledged")
 
     def wait_copies(self) -> None:
         """Block until every copy in flight at call time has completed (the
@@ -437,12 +459,12 @@ class Wal:
         try:
             if self.copy_fault is not None:
                 self.copy_fault(idx)
-            write_parts(fd, parts_fn(), off)
+            write_parts(fd, parts_fn(), off, self.io)
         except OSError:
             backlog = []
             for rel, hdr in hdrs_fn():
                 try:
-                    os.pwrite(fd, hdr, off + rel)
+                    self.io.pwrite(fd, hdr, off + rel)
                 except OSError:
                     backlog.append((fd, off + rel, hdr))
             if backlog:
@@ -793,7 +815,7 @@ class Wal:
             fd = self._fd(seg)
         except FileNotFoundError:
             return b""
-        data = os.pread(fd, n, off)
+        data = self.io.pread(fd, n, off)
         self.metrics.add(bytes_read_disk=len(data))
         return data
 
@@ -801,16 +823,59 @@ class Wal:
         """Raw positional read (used for optimistic index windows)."""
         return self._pread_raw(pos, n)
 
+    # Bounded retry for transient read errors (EIO from a loaded device,
+    # injected faults): a handful of attempts with exponential backoff, then
+    # the error surfaces as a typed WalHoleError.
+    READ_RETRIES = 3
+
+    def _pread_retry(self, pos: int, n: int) -> bytes:
+        delay = 0.0005
+        for attempt in range(self.READ_RETRIES):
+            try:
+                return self._pread_raw(pos, n)
+            except OSError:
+                if attempt == self.READ_RETRIES - 1:
+                    raise
+                self.metrics.add(read_retries=1)
+                time.sleep(delay)
+                delay *= 4
+
+    def _quarantine_pos(self, pos: int) -> None:
+        with self._quarantine_lock:
+            first = pos not in self._quarantine
+            self._quarantine[pos] = self._quarantine.get(pos, 0) + 1
+        self.metrics.add(crc_failures=1,
+                         quarantined_positions=1 if first else 0)
+
+    def quarantined(self) -> dict[int, int]:
+        """Positions whose payload failed CRC, with observation counts."""
+        with self._quarantine_lock:
+            return dict(self._quarantine)
+
     def read_record(self, pos: int, verify: bool = True) -> tuple[int, bytes]:
-        hdr = self._pread_raw(pos, HEADER_SIZE)
+        """Read + verify one record.  Failures raise the typed taxonomy
+        (all subclasses of ``KeyError``, so position-retry loops upstream
+        keep working): ``WalHoleError`` for unreadable/dropped positions,
+        ``TornRecordError`` for truncated payloads, ``CorruptionError``
+        for CRC mismatches (which also quarantine the position)."""
+        try:
+            hdr = self._pread_retry(pos, HEADER_SIZE)
+        except OSError as e:
+            raise WalHoleError(f"WAL position {pos} unreadable: {e}",
+                               pos) from e
         if len(hdr) < HEADER_SIZE:
-            raise KeyError(f"WAL position {pos} unreadable")
+            raise WalHoleError(f"WAL position {pos} unreadable", pos)
         rtype, length, crc = _HDR.unpack(hdr)
-        payload = self._pread_raw(pos + HEADER_SIZE, length)
+        try:
+            payload = self._pread_retry(pos + HEADER_SIZE, length)
+        except OSError as e:
+            raise WalHoleError(f"WAL record at {pos} unreadable: {e}",
+                               pos) from e
         if len(payload) < length:
-            raise KeyError(f"WAL record at {pos} truncated")
+            raise TornRecordError(f"WAL record at {pos} truncated", pos)
         if verify and crc32(payload) != crc:
-            raise KeyError(f"WAL record at {pos} failed CRC")
+            self._quarantine_pos(pos)
+            raise CorruptionError(f"WAL record at {pos} failed CRC", pos)
         return rtype, payload
 
     def read_records_batch(self, positions, *, max_run_bytes: int = 1 << 20,
@@ -922,7 +987,10 @@ class Wal:
                 break                                        # torn tail
             payload = self._pread_raw(pos + HEADER_SIZE, length)
             if crc32(payload) != crc:
-                pos = nxt                                    # torn payload: skip
+                # Torn payload (poisoned header from a failed copy, or
+                # latent corruption): skipped, never yielded.
+                self.metrics.add(replay_torn_records=1)
+                pos = nxt
                 continue
             if rtype == T_BATCH:
                 yield from self._iter_batch(pos, payload)
@@ -993,6 +1061,11 @@ class Wal:
         if self._dropped_segments:
             self._dropped_segments = \
                 {s for s in self._dropped_segments if s >= first_seg}
+        # Quarantined positions whose bytes were reclaimed are moot.
+        with self._quarantine_lock:
+            if self._quarantine:
+                self._quarantine = {p: c for p, c in self._quarantine.items()
+                                    if self.pos_live(p)}
 
     def advance_gc_watermark(self, pos: int) -> None:
         """Files entirely below ``pos`` may be deleted (§4.4, file-granular GC)."""
@@ -1013,7 +1086,7 @@ class Wal:
             self._dirty_segments.difference_update(todo)
         for s in todo:
             try:
-                os.fsync(self._fd(s))
+                self.io.fsync(self._fd(s))
             except (OSError, FileNotFoundError):
                 pass
 
@@ -1042,7 +1115,7 @@ class Wal:
             self._dirty_segments.clear()
         for s in todo:
             try:
-                os.fsync(self._fd(s))
+                self.io.fsync(self._fd(s))
             except FileNotFoundError:
                 pass                      # segment pruned underneath us
             except OSError:
@@ -1127,7 +1200,36 @@ class Wal:
         self._stop.set()
         for t in self._threads:
             t.join(timeout=5)
-        self.flush()                      # waits for in-flight copies too
+        try:
+            self.flush()                  # waits for in-flight copies too
+        except OSError:
+            # Best-effort durability at teardown: the failure was already
+            # surfaced to the writer that hit it (and degraded the store);
+            # close must still release threads and descriptors.
+            pass
+        if self._owns_copy_pool:
+            self._copy_pool.close()
+        with self._fd_lock:
+            for fd in self._fds.values():
+                os.close(fd)
+            self._fds.clear()
+        with self._grave_lock:
+            graveyard, self._fd_graveyard = self._fd_graveyard, []
+        for fd in graveyard:
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+
+    def abandon(self) -> None:
+        """Simulate a crash: release threads and descriptors WITHOUT
+        flushing, repairing poison headers, or fsyncing anything.  The
+        on-disk state is exactly what a kill -9 would leave; used by the
+        crash-consistency fuzz (see ``TideDB.crash``)."""
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5)
+        self.wait_copies()                # join in-flight copier pwritevs only
         if self._owns_copy_pool:
             self._copy_pool.close()
         with self._fd_lock:

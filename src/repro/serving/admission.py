@@ -38,11 +38,16 @@ from typing import Optional
 
 
 class Overloaded(RuntimeError):
-    """Raised to the submitter when policy="shed" and the queue is at the
-    high watermark; carries the rejected request's cost."""
+    """Raised to the submitter when a request is shed: the queue is at the
+    high watermark under policy="shed", or the engine is degraded
+    (read-only) and refuses writes.  Carries the rejected request's cost;
+    ``reason`` overrides the watermark message for non-queue sheds so
+    clients keep one retry/backoff handler for both."""
 
-    def __init__(self, cost: float, queued_cost: float, high: float):
+    def __init__(self, cost: float, queued_cost: float = 0.0,
+                 high: float = 0.0, reason: Optional[str] = None):
         super().__init__(
+            reason if reason is not None else
             f"admission queue full: cost {cost:.1f} would push queued "
             f"{queued_cost:.1f} past the high watermark {high:.1f}")
         self.cost = cost

@@ -37,7 +37,7 @@ from repro.core.tidestore.api import WriteBatch
 from repro.core.tidestore.system import SYSTEM_KEYSPACE
 from repro.models import serve as serve_mod
 from repro.models.base import ModelConfig
-from repro.serving.admission import AdmissionController
+from repro.serving.admission import AdmissionController, Overloaded
 
 
 @dataclasses.dataclass
@@ -115,7 +115,7 @@ class KvBatchServer:
     """
 
     def __init__(self, db, *, max_batch: int = 256, write_opts=None,
-                 prune_opts=None, admission=None):
+                 prune_opts=None, admission=None, scrub: bool = False):
         self.db = db
         self.max_batch = max_batch
         # Overload control at the submission edge (see serving/admission):
@@ -145,6 +145,14 @@ class KvBatchServer:
                             if prune_opts is not None else None)
         self.prune_steps = 0
         self.prune_scanned = 0
+        # Scrubbing rides idle steps the same way pruning does: when
+        # scrub=True (and the engine exposes scrub_step), an idle step()
+        # CRC-verifies one sealed WAL segment — a busy server defers
+        # integrity work to lulls, an idle one sweeps the store for free.
+        self._scrub_step = (getattr(db, "scrub_step", None)
+                            if scrub else None)
+        self.scrub_steps = 0
+        self.scrub_checked = 0
         self._lock = threading.Lock()
         self.queue: collections.deque = collections.deque()
         self._closed = False
@@ -168,6 +176,7 @@ class KvBatchServer:
         self.write_stages = 0
         self.write_bytes = 0
         self.serve_errors = 0           # failed stages (requests got .error)
+        self.writes_shed_degraded = 0   # writes refused while engine degraded
 
     def _submit(self, req):
         if self._closed:
@@ -184,6 +193,16 @@ class KvBatchServer:
                 raise ValueError(
                     f"keyspace {SYSTEM_KEYSPACE!r} is read-only: its rows "
                     f"are maintained by the engine's StatsCollector")
+        if (isinstance(req, KvWrite)
+                and getattr(self.db, "health", "ok") == "degraded"):
+            # A degraded engine is read-only: shed the write at submit time
+            # through the same Overloaded channel as admission control, so
+            # clients with retry/backoff logic need no new error handling —
+            # and reads/exists keep flowing untouched.
+            self.writes_shed_degraded += 1
+            reason = getattr(self.db, "degraded_reason", None) or "unknown"
+            raise Overloaded(
+                0.0, reason=f"engine degraded (read-only): {reason}")
         if self.admission is not None:
             # Charge BEFORE enqueueing: a shed request never enters the
             # queue, a backpressured submitter blocks here.  The charged
@@ -225,6 +244,7 @@ class KvBatchServer:
                     for _ in range(min(self.max_batch, len(self.queue)))]
         if not take:
             self._maybe_prune()          # idle steps still make progress
+            self._maybe_scrub()          # ... and verify integrity in lulls
             return 0
         # Conflict keys normalize the keyspace (engines accept an index or
         # a name for the same keyspace; both spellings must collide here).
@@ -287,6 +307,14 @@ class KvBatchServer:
         if scanned:
             self.prune_steps += 1
             self.prune_scanned += scanned
+
+    def _maybe_scrub(self) -> None:
+        if self._scrub_step is None:
+            return
+        checked = self._scrub_step(1)
+        if checked:
+            self.scrub_steps += 1
+            self.scrub_checked += checked
 
     def _serve_reads(self, reqs: list) -> int:
         # One multi-call per (op, keyspace) group present in the run.
@@ -413,7 +441,11 @@ class KvBatchServer:
                                if self.batches_served else 0.0),
                 "prune_steps": self.prune_steps,
                 "prune_scanned": self.prune_scanned,
+                "scrub_steps": self.scrub_steps,
+                "scrub_checked": self.scrub_checked,
                 "serve_errors": self.serve_errors,
+                "writes_shed_degraded": self.writes_shed_degraded,
+                "health": getattr(self.db, "health", "ok"),
                 "queued": queued,
                 **(self.admission.stats() if self.admission is not None
                    else {})}
