@@ -1,6 +1,6 @@
 """Fault-schedule fuzz + integrity gates (robustness tier).
 
-Three correctness gates, no timing targets:
+Four correctness gates, no timing targets:
 
 1. **Durability fuzz** — N seeded random fault schedules (``FaultyIo``
    injecting EIO / ENOSPC / short / torn writes / latency into the WAL's
@@ -16,22 +16,40 @@ Three correctness gates, no timing targets:
    to read-only degraded mode; ``KvBatchServer`` then sheds writes via
    ``Overloaded`` while continuing to serve reads/exists for everything
    that landed.
+4. **Crash-schedule exploration** — where the fuzz tier samples, the
+   explorer (``tidestore.simulate``) is systematic: each seeded trace is
+   crashed at EVERY injectable I/O call it reaches (meta-checked — fork k
+   must report ``crashed_at == k``), reopened, and verified against the
+   ``ShadowModel`` durability oracle.  Sharded traces give one shard an
+   ENOSPC schedule and additionally gate ``try_recover``: degraded forks
+   must refuse to clear on a still-failing device and must exit degraded
+   mode once it heals.
 
-Emits ``BENCH_faults.json`` (schema ``faults/v1``)::
+Emits ``BENCH_faults.json`` (schema ``faults/v2``)::
 
     {
-      "schema": "faults/v1",
+      "schema": "faults/v2",
       "fuzz": {"examples": 200, "violations": 0, "acked_total": ...,
                "degraded_runs": ..., "injected": {"eio": ..., ...}},
       "scrub": {"planted": ..., "found": ..., "false_positives": 0,
                 "detection_rate": 1.0},
       "degraded_serving": {"degraded": true, "reads_served": ...,
-                           "writes_shed": ..., "writes_failed": ...}
+                           "writes_shed": ..., "writes_failed": ...},
+      "explorer": {"traces": 25, "fault_points": ..., "forks": ...,
+                   "violations": 0, "unreached_points": 0,
+                   "styles": {"clean": ..., "torn": ...},
+                   "sharded": {"traces": 8, "fault_points": ...,
+                               "degraded_forks": ..., "recovered": ...,
+                               "stayed_degraded": ...}}
     }
 
-``python -m benchmarks.faults --smoke`` runs all three gates and exits
-non-zero unless the invariant held on every schedule, the scrubber found
-100% of planted corruptions, and the degraded store kept serving reads.
+``python -m benchmarks.faults --smoke`` runs all four gates (``--seeds N``
+resizes the fuzz tier) and exits non-zero unless the invariant held on
+every schedule, the scrubber found 100% of planted corruptions, the
+degraded store kept serving reads, and the explorer found zero oracle
+violations at full fault-point coverage.  ``--smoke-explorer`` runs only a
+bounded fixed-seed explorer pass (CI budget: well under a minute) and
+prints the explored fault-point count.
 """
 from __future__ import annotations
 
@@ -253,14 +271,86 @@ def _run_degraded_serving(csv=print) -> dict:
         shutil.rmtree(d, ignore_errors=True)
 
 
+# ------------------------------------------------------------------ gate 4
+def _run_explorer(n_traces: int = 25, n_sharded: int = 8, csv=print,
+                  n_ops: int = 18, sharded_ops: int = 12) -> dict:
+    """Systematic crash-schedule exploration (``tidestore.simulate``).
+
+    Every seeded trace is crashed at EVERY injectable I/O call it reaches
+    — the meta-check is ``fork_points == range(fault_points)``: fork k
+    really died at fault point k, so no point was silently skipped or
+    swallowed.  Sharded traces run shard 0 under an ENOSPC schedule and
+    gate the ``try_recover`` contract on every degraded fork."""
+    from repro.core.tidestore.simulate import (explore_sharded_trace,
+                                               explore_trace)
+    out = {
+        "traces": n_traces, "fault_points": 0, "forks": 0,
+        "violations": 0, "violation_detail": [],
+        "unreached_points": 0, "schedule_mismatches": 0,
+        "styles": {},
+        "sharded": {"traces": n_sharded, "fault_points": 0, "forks": 0,
+                    "degraded_forks": 0, "recovered": 0,
+                    "stayed_degraded": 0, "violations": 0},
+    }
+    for seed in range(n_traces):
+        rep = explore_trace(seed, n_ops=n_ops)
+        out["fault_points"] += rep["fault_points"]
+        out["forks"] += rep["forks"]
+        out["violations"] += len(rep["violations"])
+        out["violation_detail"].extend(rep["violations"][:3])
+        out["unreached_points"] += len(rep["unreached_points"])
+        if rep["fork_points"] != list(range(rep["fault_points"])):
+            out["schedule_mismatches"] += 1
+        for style, n in rep["style_counts"].items():
+            out["styles"][style] = out["styles"].get(style, 0) + n
+    sh = out["sharded"]
+    for seed in range(n_sharded):
+        rep = explore_sharded_trace(seed, n_ops=sharded_ops)
+        sh["fault_points"] += rep["fault_points"]
+        sh["forks"] += rep["forks"]
+        sh["degraded_forks"] += rep["degraded_forks"]
+        sh["recovered"] += rep["recovered"]
+        sh["stayed_degraded"] += rep["stayed_degraded"]
+        sh["violations"] += len(rep["violations"])
+        out["violation_detail"].extend(rep["violations"][:3])
+        if rep["fork_points"] != list(range(rep["fault_points"])):
+            out["schedule_mismatches"] += 1
+    out["violation_detail"] = out["violation_detail"][:5]
+    csv(f"faults.explorer,0,{n_traces} traces fault_points="
+        f"{out['fault_points']} forks={out['forks']} "
+        f"violations={out['violations']} "
+        f"unreached={out['unreached_points']} styles={out['styles']}")
+    csv(f"faults.explorer.sharded,0,{n_sharded} traces fault_points="
+        f"{sh['fault_points']} degraded={sh['degraded_forks']} "
+        f"recovered={sh['recovered']} "
+        f"stayed_degraded={sh['stayed_degraded']} "
+        f"violations={sh['violations']}")
+    return out
+
+
+def _explorer_ok(ex: dict) -> bool:
+    sh = ex["sharded"]
+    return (ex["violations"] == 0 and sh["violations"] == 0
+            and ex["unreached_points"] == 0
+            and ex["schedule_mismatches"] == 0
+            and ex["fault_points"] > 0
+            and ex["forks"] == ex["fault_points"]
+            and len(ex["styles"]) >= 2
+            and sh["degraded_forks"] > 0
+            and sh["recovered"] == sh["degraded_forks"])
+
+
 # ---------------------------------------------------------------- harness
 def run(n_seeds: int = 200, csv=print,
-        json_path: str | None = "BENCH_faults.json") -> dict:
+        json_path: str | None = "BENCH_faults.json",
+        explorer_traces: int = 25, explorer_sharded: int = 8) -> dict:
     report = {
-        "schema": "faults/v1",
+        "schema": "faults/v2",
         "fuzz": _run_fuzz(n_seeds, csv),
         "scrub": _run_scrub_detection(csv=csv),
         "degraded_serving": _run_degraded_serving(csv=csv),
+        "explorer": _run_explorer(n_traces=explorer_traces,
+                                  n_sharded=explorer_sharded, csv=csv),
     }
     if json_path:
         with open(json_path, "w") as f:
@@ -269,11 +359,12 @@ def run(n_seeds: int = 200, csv=print,
     return report
 
 
-def run_smoke(csv=print) -> bool:
+def run_smoke(csv=print, n_seeds: int = 200) -> bool:
     """CI gates: durability invariant on every schedule, 100% scrub
-    detection with zero false positives, and a full disk leaves a
-    read-serving (write-shedding) store."""
-    report = run(n_seeds=200, csv=csv, json_path="BENCH_faults.json")
+    detection with zero false positives, a full disk leaves a
+    read-serving (write-shedding) store, and the crash-schedule explorer
+    holds the oracle at every reachable fault point."""
+    report = run(n_seeds=n_seeds, csv=csv, json_path="BENCH_faults.json")
     fz, sc, dg = (report["fuzz"], report["scrub"],
                   report["degraded_serving"])
     invariant = fz["violations"] == 0 and fz["acked_total"] > 0 \
@@ -283,9 +374,29 @@ def run_smoke(csv=print) -> bool:
     serving = (dg["degraded"] and dg["writes_shed"] > 0
                and dg["reads_served"] == dg["reads_expected"]
                and dg["reads_served"] > 0)
-    ok = invariant and detection and serving
+    explorer = _explorer_ok(report["explorer"])
+    ok = invariant and detection and serving and explorer
     csv(f"faults.smoke,0,{'ok' if ok else 'FAIL'} "
-        f"(invariant={invariant} detection={detection} serving={serving})")
+        f"(invariant={invariant} detection={detection} serving={serving} "
+        f"explorer={explorer})")
+    return ok
+
+
+def run_smoke_explorer(csv=print, n_traces: int = 3,
+                       n_sharded: int = 1) -> bool:
+    """Bounded explorer-only CI gate: a fixed small seed set, reduced
+    trace length, still crashing at EVERY reachable fault point.  Prints
+    the explored fault-point count; well under a minute."""
+    ex = _run_explorer(n_traces=n_traces, n_sharded=n_sharded, csv=csv,
+                       n_ops=10, sharded_ops=10)
+    ok = _explorer_ok(ex)
+    csv(f"faults.smoke_explorer,0,{'ok' if ok else 'FAIL'} "
+        f"fault_points_explored="
+        f"{ex['fault_points'] + ex['sharded']['fault_points']} "
+        f"(violations={ex['violations'] + ex['sharded']['violations']} "
+        f"unreached={ex['unreached_points']} "
+        f"recovered={ex['sharded']['recovered']}"
+        f"/{ex['sharded']['degraded_forks']})")
     return ok
 
 
@@ -295,12 +406,24 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="200 seeded fault schedules + scrub detection + "
-                         "degraded serving; exit 1 unless every "
-                         "acknowledged write survived crash+reopen, all "
-                         "planted corruptions were found, and the "
-                         "degraded store kept serving reads")
+                    help="seeded fault schedules + scrub detection + "
+                         "degraded serving + crash-schedule explorer; "
+                         "exit 1 unless every acknowledged write survived "
+                         "crash+reopen, all planted corruptions were "
+                         "found, the degraded store kept serving reads, "
+                         "and the explorer held the durability oracle at "
+                         "every reachable fault point")
+    ap.add_argument("--smoke-explorer", action="store_true",
+                    help="bounded explorer-only gate: fixed seeds, every "
+                         "fault point, prints the explored fault-point "
+                         "count; exits 1 on any oracle violation or "
+                         "unreached point")
+    ap.add_argument("--seeds", type=int, default=200, metavar="N",
+                    help="fuzz-schedule seed count for the full run / "
+                         "--smoke (default: 200)")
     args = ap.parse_args()
+    if args.smoke_explorer:
+        sys.exit(0 if run_smoke_explorer() else 1)
     if args.smoke:
-        sys.exit(0 if run_smoke() else 1)
-    run()
+        sys.exit(0 if run_smoke(n_seeds=args.seeds) else 1)
+    run(n_seeds=args.seeds)

@@ -55,6 +55,15 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.recovery --smoke
 # through KvBatchServer while shedding writes.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.faults --smoke
 
+# Crash-schedule explorer smoke: a fixed small seed set of deterministic
+# traces, each crashed at EVERY injectable I/O call it reaches (the fork's
+# crashed_at must equal its scheduled point — no silently skipped or
+# swallowed schedules), reopened, and checked against the model-based
+# durability oracle; sharded traces additionally gate the try_recover
+# contract on every degraded fork.  Prints the explored fault-point count;
+# bounded well under a minute.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.faults --smoke-explorer
+
 # Overload smoke: under 4x sustained overload the admission controller must
 # keep queue depth and accounted cost at/below the watermark while the
 # admitted stream keeps being served, the no-admission baseline must be

@@ -13,6 +13,9 @@ from .large_table import CellState, KeyspaceConfig, LargeTable
 from .relocate import Decision, PruneController, PruneThread, Relocator
 from .scrub import Scrubber, ScrubThread, read_scrub_table
 from .shard import ShardedTideDB
+from .simulate import (CrashPointIo, ShadowModel, SimulatedCrash, TraceOp,
+                       apply_op, explore_sharded_trace, explore_trace,
+                       explorer_config, generate_trace, run_trace)
 from .system import (SYSTEM_KEYSPACE, SYSTEM_KS_ID, CopierGovernor,
                      StatsCollector,
                      decode_row_key, read_tables, row_key,
@@ -35,4 +38,7 @@ __all__ = [
     "WalReadError", "CorruptionError", "TornRecordError", "WalHoleError",
     "UnrepairedHoleError", "DegradedError", "KeyWidthError",
     "Scrubber", "ScrubThread", "read_scrub_table",
+    "SimulatedCrash", "CrashPointIo", "ShadowModel", "TraceOp",
+    "generate_trace", "run_trace", "apply_op", "explorer_config",
+    "explore_trace", "explore_sharded_trace",
 ]

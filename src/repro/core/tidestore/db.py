@@ -39,7 +39,7 @@ from .system import (SYSTEM_KEYSPACE, SYSTEM_KS_ID, TAG_HEALTH,
 from .util import Metrics
 from .wal import (_ENTRY_HDR, HEADER_SIZE, T_ENTRY, T_INDEX, T_TOMBSTONE,
                   CopyPool, Wal, WalConfig, decode_entry, decode_tombstone,
-                  encode_entry, encode_tombstone, payload_len)
+                  encode_entry, encode_tombstone, entry_framed, payload_len)
 
 # Values below this stage through one ``encode_entry`` concatenation; at or
 # above it the entry rides to ``pwritev`` as uncopied iovec parts.  For tiny
@@ -118,6 +118,7 @@ class TideDB:
         # DegradedError, and health is visible in stats()/__system.
         self._health_lock = threading.Lock()
         self._degraded_reason: Optional[str] = None
+        self._last_recover_attempt: Optional[float] = None
 
         # The reserved __system keyspace (self-observation tables) lives at
         # the FIXED sentinel id SYSTEM_KS_ID (0xFFFF), never a position in
@@ -263,6 +264,13 @@ class TideDB:
         # segments could never be epoch-pruned.
         seg_size = self.value_wal.cfg.segment_size
         for pos, rtype, payload in self.value_wal.iter_records(replay_from):
+            if not entry_framed(rtype, payload):
+                # A write torn inside the record header over a preallocated
+                # (zero-filled) segment leaves ``type=T_ENTRY, length=0,
+                # crc=0`` — and crc32(b"") == 0, so the phantom passes CRC.
+                # Structurally impossible frames are torn bytes, not data.
+                self.metrics.add(replay_torn_records=1)
+                continue
             if rtype == T_ENTRY:
                 ks_id, key, _value, epoch = decode_entry(payload)
                 marker = pos
@@ -379,6 +387,78 @@ class TideDB:
     @property
     def degraded_reason(self) -> Optional[str]:
         return self._degraded_reason
+
+    def try_recover(self, *, min_retry_interval_s: float = 0.25) -> bool:
+        """Operator escape hatch out of degraded mode WITHOUT a reopen.
+
+        Re-probes the disk: a test write + fsync of a scratch file through
+        the configured I/O backend, then a full ``flush()`` of both WALs —
+        which drains the poison-header repair backlog and fsyncs every
+        dirty segment.  Only if all of that lands (and no dirty mark or
+        backlog entry survives — per-segment fsync failures are swallowed
+        and re-marked, not raised) does the degraded flag clear and the
+        write surface reopen.  Returns True when the store is healthy
+        afterwards; a store that was never degraded returns True at once.
+
+        Failed probes are rate-limited: a call within
+        ``min_retry_interval_s`` of a failed attempt returns False without
+        touching the disk, so an operator loop (or a serving tier retrying
+        on every shed write) cannot flap the device with probe traffic.
+        """
+        with self._health_lock:
+            if self._degraded_reason is None:
+                return True
+            last = self._last_recover_attempt
+            if last is not None and \
+                    time.monotonic() - last < min_retry_interval_s:
+                self.metrics.add(recover_probes_skipped=1)
+                return False
+            # Stamp before probing so concurrent callers rate-limit against
+            # this attempt instead of racing their own probes.
+            self._last_recover_attempt = time.monotonic()
+        self.metrics.add(recover_probes=1)
+        probe = os.path.join(self.path, "recover.probe")
+        try:
+            fd = self._io.open(probe,
+                               os.O_CREAT | os.O_WRONLY | os.O_TRUNC)
+            try:
+                self._io.pwrite(fd, b"tide-recover-probe", 0)
+                self._io.fsync(fd)
+            finally:
+                os.close(fd)
+            self.value_wal.flush()       # drains the poison backlog too
+            self.index_wal.flush()
+            if self.value_wal.has_poison_backlog() \
+                    or self.value_wal.has_dirty() \
+                    or self.index_wal.has_dirty():
+                raise OSError(
+                    errno.EIO, "dirty segments or poison backlog survived "
+                               "the re-probe flush")
+        except OSError:
+            return False                 # stays degraded; stamp rate-limits
+        finally:
+            try:
+                os.unlink(probe)
+            except OSError:
+                pass
+        with self._health_lock:
+            recovered_from = self._degraded_reason
+            self._degraded_reason = None
+            self._last_recover_attempt = None
+        self.metrics.add(degraded_recoveries=1)
+        # Findings the scrubber collected through the dead device are
+        # outage artifacts; re-verify everything with healthy I/O.
+        self.scrubber.rescan()
+        try:
+            row = msgpack.packb(
+                {"health": "ok", "recovered_from": recovered_from,
+                 "time": time.time()}, use_bin_type=True)
+            with self._allow_system_writes():
+                self.put(row_key(TAG_HEALTH, 0, 0), row,
+                         keyspace=self._system_ks_id)
+        except Exception:
+            pass
+        return True
 
     def keyspace(self, name) -> KeyspaceHandle:
         """Bind a keyspace once; the handle's methods never re-thread it."""

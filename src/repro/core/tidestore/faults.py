@@ -196,6 +196,32 @@ class FaultyIo(IoBackend):
                 out[kind] = out.get(kind, 0) + 1
             return out
 
+    def snapshot(self) -> Dict[str, object]:
+        """Consistent view of the per-op call counters and the injected
+        log, for per-fork coverage accounting (explorer harnesses)."""
+        with self._lock:
+            return {"calls": dict(self.calls),
+                    "injected": list(self.injected)}
+
+    def reset(self, seed: Optional[int] = None) -> Dict[str, object]:
+        """Zero the call counters and the injected log, returning the final
+        pre-reset snapshot.
+
+        A ``FaultyIo`` reused across explorer forks otherwise accumulates
+        counts forever (rules keyed on call counters would also never fire
+        again), so per-fork coverage accounting was inexact.  Passing
+        ``seed`` re-arms the prefix RNG too, making the next fork's
+        short/torn prefixes reproduce exactly.
+        """
+        with self._lock:
+            out = {"calls": dict(self.calls),
+                   "injected": list(self.injected)}
+            self.calls = {op: 0 for op in FAULT_OPS}
+            self.injected = []
+            if seed is not None:
+                self._rng = random.Random(seed)
+            return out
+
     # -- faulted ops --------------------------------------------------------
 
     def open(self, path: str, flags: int, mode: int = 0o644) -> int:

@@ -44,7 +44,7 @@ from .index import TOMB_FLAG, is_tombstone, real_pos
 from .large_table import CellState, LargeTable
 from .util import Metrics
 from .wal import (HEADER_SIZE, T_ENTRY, T_TOMBSTONE, Wal, decode_entry,
-                  decode_tombstone, encode_tombstone)
+                  decode_tombstone, encode_tombstone, entry_framed)
 
 
 class Decision(Enum):
@@ -224,6 +224,11 @@ class Relocator:
             if pos >= self._scan_cutoff:
                 break
             end = pos + HEADER_SIZE + len(payload)
+            if not entry_framed(rtype, payload):
+                # Header-torn zero phantom (CRC-valid but structurally
+                # impossible): dead bytes, never a live record to move.
+                pos_after = end
+                continue
             if rtype == T_ENTRY:
                 ks_id, key, value, epoch = decode_entry(payload)
                 action = self._maybe_relocate(ks_id, key, value, epoch,

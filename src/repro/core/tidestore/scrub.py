@@ -109,6 +109,17 @@ class Scrubber:
             pos = nxt
         return checked, findings
 
+    def rescan(self) -> None:
+        """Restart the sweep from the first sealed segment, discarding any
+        partial pass.  ``TideDB.try_recover`` calls this after a successful
+        disk re-probe: findings collected through the failing device
+        (``kind == "io"``) are artifacts of the outage, so the next pass
+        must re-verify every segment with healthy I/O instead of resuming
+        mid-sweep and carrying the outage's scar tissue forward."""
+        with self._lock:
+            self._cursor = None
+            self._pass_findings = []
+
     # ------------------------------------------------------------- driving
     def step(self, max_segments: int = 1) -> int:
         """Verify up to ``max_segments`` sealed segments; returns records

@@ -61,9 +61,13 @@ class ShardedTideDB:
 
     def __init__(self, path: str, config: Optional[DbConfig] = None, *,
                  n_shards: int = 4, threads: Optional[int] = None,
-                 scale_cells: bool = True):
+                 scale_cells: bool = True, shard_ios=None):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
+        if shard_ios is not None and len(shard_ios) != n_shards:
+            raise ValueError(
+                f"shard_ios must align 1:1 with shards "
+                f"({len(shard_ios)} backends for {n_shards} shards)")
         self.path = path
         self.cfg = config or DbConfig()
         self.n_shards = n_shards
@@ -87,8 +91,17 @@ class ShardedTideDB:
             self._copy_pool = CopyPool(
                 clamp_copy_threads(self.cfg.copy_threads)
                 if self.cfg.clamp_copy_threads else self.cfg.copy_threads)
-        self.shards = [TideDB(os.path.join(path, f"shard-{i:02d}"), shard_cfg,
-                              copy_pool=self._copy_pool)
+        # Per-shard fault schedules (explorer/fuzz harnesses): ``shard_ios``
+        # carries one ``IoBackend`` per shard — a ``None`` entry keeps the
+        # shared config's backend — so one shard's disk can die or degrade
+        # while its siblings run on healthy I/O.
+        def _shard_cfg(i: int) -> DbConfig:
+            if shard_ios is None or shard_ios[i] is None:
+                return shard_cfg
+            return dataclasses.replace(shard_cfg, io=shard_ios[i])
+
+        self.shards = [TideDB(os.path.join(path, f"shard-{i:02d}"),
+                              _shard_cfg(i), copy_pool=self._copy_pool)
                        for i in range(n_shards)]
         # The clamp happened before any shard metrics existed; record it
         # once (shard 0) so the summed stats() surface shows the gap.
@@ -339,6 +352,16 @@ class ShardedTideDB:
             if sh.degraded:
                 return f"shard {i}: {sh.degraded_reason}"
         return None
+
+    def try_recover(self, **kw) -> bool:
+        """Fan the operator disk re-probe (``TideDB.try_recover``) across
+        shards; True only when EVERY shard is healthy afterwards.  Healthy
+        shards return True without probing, so this is safe to call when
+        only one shard is degraded."""
+        ok = True
+        for sh in self.shards:
+            ok = sh.try_recover(**kw) and ok
+        return ok
 
     def scrub(self) -> dict:
         """One full CRC pass on every shard, fanned across the pool.

@@ -129,6 +129,9 @@ class Metrics:
     scrub_records_checked: int = 0     # records CRC-verified by the scrubber
     scrub_corruptions_found: int = 0   # corrupt records the scrubber flagged
     degraded_transitions: int = 0      # ok -> degraded (read-only) flips
+    degraded_recoveries: int = 0       # degraded -> ok via try_recover
+    recover_probes: int = 0            # try_recover disk re-probes attempted
+    recover_probes_skipped: int = 0    # re-probes refused by the rate limit
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def add(self, **kwargs: int) -> None:

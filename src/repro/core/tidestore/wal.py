@@ -219,6 +219,30 @@ def make_record(rtype: int, payload: bytes) -> bytes:
     return _HDR.pack(rtype, len(payload), crc32(payload)) + payload
 
 
+def entry_framed(rtype: int, payload: bytes) -> bool:
+    """True iff an entry/tombstone payload is structurally complete.
+
+    CRC alone cannot reject every torn record: a write torn inside the
+    9-byte record header over a preallocated (zero-filled) segment can
+    leave ``type=T_ENTRY, length=0, crc=0`` — and ``crc32(b"") == 0``, so
+    the empty phantom validates.  ``encode_entry``/``encode_tombstone``
+    never emit payloads shorter than the entry header + key, so anything
+    shorter is torn, not data.
+
+    The WAL itself stays payload-opaque (``iter_records`` yields any
+    CRC-valid record); this check belongs to the consumers that DECODE
+    entries — replay and relocation harvesting — which must skip a
+    phantom instead of letting ``decode_entry`` raise ``struct.error``
+    and fail the reopen."""
+    if rtype not in (T_ENTRY, T_TOMBSTONE):
+        return True
+    if len(payload) < _ENTRY_HDR.size:
+        return False
+    _, klen, _ = _ENTRY_HDR.unpack_from(payload, 0)
+    need = _ENTRY_HDR.size + klen
+    return len(payload) >= need if rtype == T_ENTRY else len(payload) == need
+
+
 def _parts_of(payload) -> list:
     """Normalize a record payload to its iovec parts.  A payload may be a
     single buffer or a list of buffers (e.g. ``[entry_header, key, value]``)
@@ -1123,6 +1147,21 @@ class Wal:
                 # instead of silently reporting durability.
                 with self._dirty_lock:
                     self._dirty_segments.add(s)
+
+    def has_dirty(self) -> bool:
+        """True while segments still carry dirty marks.  ``flush()``
+        swallows per-segment fsync failures (re-marking the segment for the
+        next attempt), so "flush returned but marks survived" is the signal
+        that durability was NOT established — ``TideDB.try_recover`` uses
+        it to refuse declaring the disk healthy."""
+        with self._dirty_lock:
+            return bool(self._dirty_segments)
+
+    def has_poison_backlog(self) -> bool:
+        """True while failed copies still have unrepaired poison headers
+        queued (``flush()`` must drain them before acknowledging)."""
+        with self._inflight_lock:
+            return bool(self._poison_backlog)
 
     # ----------------------------------------------------------- epochs/gc
     def segment_epochs(self) -> dict[int, tuple[int, int]]:

@@ -177,6 +177,8 @@ class KvBatchServer:
         self.write_bytes = 0
         self.serve_errors = 0           # failed stages (requests got .error)
         self.writes_shed_degraded = 0   # writes refused while engine degraded
+        self.recover_attempts = 0       # try_recover calls routed to engine
+        self.recoveries = 0             # ... that left the engine healthy
 
     def _submit(self, req):
         if self._closed:
@@ -395,6 +397,22 @@ class KvBatchServer:
             for r in reqs)
         return len(reqs)
 
+    def try_recover(self) -> bool:
+        """Operator path out of degraded mode without bouncing the engine:
+        delegate to ``db.try_recover()`` (disk re-probe + repair-backlog
+        drain).  On success the submit-time degraded check reads the
+        engine's live health, so writes stop being shed immediately — no
+        server restart, no reopen.  Engines without ``try_recover`` just
+        report their current health."""
+        fn = getattr(self.db, "try_recover", None)
+        if fn is None:
+            return getattr(self.db, "health", "ok") == "ok"
+        self.recover_attempts += 1
+        ok = bool(fn())
+        if ok:
+            self.recoveries += 1
+        return ok
+
     def run_until_drained(self, max_steps: int = 100_000) -> int:
         total = 0
         for _ in range(max_steps):
@@ -445,6 +463,8 @@ class KvBatchServer:
                 "scrub_checked": self.scrub_checked,
                 "serve_errors": self.serve_errors,
                 "writes_shed_degraded": self.writes_shed_degraded,
+                "recover_attempts": self.recover_attempts,
+                "recoveries": self.recoveries,
                 "health": getattr(self.db, "health", "ok"),
                 "queued": queued,
                 **(self.admission.stats() if self.admission is not None

@@ -37,3 +37,43 @@ except ImportError:          # pragma: no cover - exercised on bare images
                 reason="hypothesis not installed "
                        "(pip install -r requirements-dev.txt)")(fn)
         return deco
+
+
+# ---------------------------------------------------------------------------
+# Stateful testing (hypothesis.stateful)
+# ---------------------------------------------------------------------------
+# Same contract as above for ``RuleBasedStateMachine`` suites: with
+# hypothesis installed you get the real rule engine; without it the
+# decorators are inert pass-throughs (so class bodies still import and the
+# machine class stays introspectable) and ``run_state_machine_as_test``
+# skips the calling test.  Gate on ``HAVE_STATEFUL`` to write fallback
+# drivers that exercise the same machine deterministically.
+
+try:
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, precondition, rule,
+                                     run_state_machine_as_test)
+    HAVE_STATEFUL = True
+except ImportError:          # pragma: no cover - exercised on bare images
+    HAVE_STATEFUL = False
+
+    class RuleBasedStateMachine:
+        """Inert stand-in: supports plain instantiation and teardown so a
+        deterministic fallback driver can run the machine by hand."""
+
+        def teardown(self):
+            pass
+
+    def _passthrough_decorator(*a, **kw):
+        if len(a) == 1 and callable(a[0]) and not kw:
+            return a[0]                     # bare @rule usage
+        return lambda fn: fn
+
+    rule = _passthrough_decorator
+    initialize = _passthrough_decorator
+    invariant = _passthrough_decorator
+    precondition = _passthrough_decorator
+
+    def run_state_machine_as_test(machine_cls, *, settings=None):
+        pytest.skip("hypothesis not installed "
+                    "(pip install -r requirements-dev.txt)")

@@ -79,3 +79,107 @@ def test_fsdp_avoids_contracting_dim_for_experts():
     assert tuple(gate) == (None, "model", None, "data")
     down = specs["layers"]["moe"]["we_down"]    # (L, E, ff, d)
     assert tuple(down) == (None, "model", None, "data")
+
+
+# ---------------------------------------------------------------------------
+# Engine sharding: per-shard fault schedules (ShardedTideDB.shard_ios)
+# ---------------------------------------------------------------------------
+# One shard's device can die or degrade while its siblings run on healthy
+# I/O — the storage-side analogue of a single failed host in the mesh.
+
+
+class TestPerShardFaultSchedules:
+    @staticmethod
+    def _cfg():
+        from repro.core.tidestore import DbConfig, KeyspaceConfig
+        from repro.core.tidestore.wal import WalConfig
+        return DbConfig(
+            keyspaces=[KeyspaceConfig("default", n_cells=16,
+                                      dirty_flush_threshold=64)],
+            wal=WalConfig(segment_size=16 * 1024, background=False),
+            index_wal=WalConfig(segment_size=1024 * 1024, background=False),
+            background_snapshots=False,
+            system_stats=False,
+        )
+
+    @staticmethod
+    def _full_disk():
+        from repro.core.tidestore import FaultRule
+        return [FaultRule(op=op, kind="enospc", after=0, count=None)
+                for op in ("pwrite", "pwritev", "fsync", "ftruncate")]
+
+    def test_shard_ios_must_align_with_shards(self, tmp_path):
+        from repro.core.tidestore import FaultyIo, ShardedTideDB
+        with pytest.raises(ValueError, match="shard_ios"):
+            ShardedTideDB(str(tmp_path), self._cfg(), n_shards=3,
+                          shard_ios=[FaultyIo([]), None])
+
+    def test_one_shard_degrades_siblings_keep_serving(self, tmp_path):
+        """Mid-workload ENOSPC on shard 0 only: exactly that shard
+        degrades, scalar writes routed to siblings keep landing, and a
+        cross-shard multi_get returns every surviving key."""
+        import hashlib
+
+        from repro.core.tidestore import (DegradedError, FaultyIo,
+                                          ShardedTideDB)
+        io0 = FaultyIo([])
+        sdb = ShardedTideDB(str(tmp_path), self._cfg(), n_shards=3,
+                            shard_ios=[io0, None, None])
+        try:
+            keys = [hashlib.sha256(b"shard-fault-%d" % i).digest()
+                    for i in range(48)]
+            survivors = {}
+            # Phase 1: healthy everywhere.
+            for k in keys[:16]:
+                sdb.put(k, b"pre-" + k[:4])
+                survivors[k] = b"pre-" + k[:4]
+            # Phase 2: shard 0's device fills mid-workload.
+            io0.rules = self._full_disk()
+            for k in keys[16:]:
+                try:
+                    sdb.put(k, b"mid-" + k[:4])
+                    survivors[k] = b"mid-" + k[:4]
+                except (OSError, DegradedError):
+                    assert sdb.shard_of(k) == 0     # only shard 0 may fail
+            st = sdb.stats()
+            assert st["degraded_shards"] == 1
+            assert sdb.shards[0].degraded
+            assert all(not sh.degraded for sh in sdb.shards[1:])
+            assert sdb.health == "degraded"
+            assert sdb.degraded_reason.startswith("shard 0:")
+            # Siblings accepted every write routed at them.
+            routed_healthy = [k for k in keys[16:] if sdb.shard_of(k) != 0]
+            assert routed_healthy, "want traffic on healthy shards"
+            assert all(k in survivors for k in routed_healthy)
+            # Cross-shard batched read (the degraded shard still serves
+            # reads) returns all surviving keys, and only those.
+            got = sdb.multi_get(keys)
+            for k, v in zip(keys, got):
+                assert v == survivors.get(k)
+        finally:
+            sdb.close(flush=False)
+
+    def test_healed_shard_rejoins_via_try_recover(self, tmp_path):
+        import hashlib
+
+        from repro.core.tidestore import FaultyIo, ShardedTideDB
+        io0 = FaultyIo([])
+        sdb = ShardedTideDB(str(tmp_path), self._cfg(), n_shards=2,
+                            shard_ios=[io0, None])
+        try:
+            keys = [hashlib.sha256(b"rejoin-%d" % i).digest()
+                    for i in range(32)]
+            on0 = [k for k in keys if sdb.shard_of(k) == 0]
+            io0.rules = self._full_disk()
+            with pytest.raises(OSError):
+                for k in on0:
+                    sdb.shards[0].put(k, b"x" * 200)
+            assert sdb.stats()["degraded_shards"] == 1
+            assert sdb.try_recover(min_retry_interval_s=0.0) is False
+            io0.rules = []                          # space freed
+            assert sdb.try_recover(min_retry_interval_s=0.0) is True
+            assert sdb.stats()["degraded_shards"] == 0
+            sdb.put(on0[0], b"post-heal")           # write surface reopened
+            assert sdb.get(on0[0]) == b"post-heal"
+        finally:
+            sdb.close(flush=False)
