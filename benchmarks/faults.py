@@ -1,6 +1,6 @@
 """Fault-schedule fuzz + integrity gates (robustness tier).
 
-Four correctness gates, no timing targets:
+Five correctness gates, no timing targets:
 
 1. **Durability fuzz** — N seeded random fault schedules (``FaultyIo``
    injecting EIO / ENOSPC / short / torn writes / latency into the WAL's
@@ -23,33 +23,51 @@ Four correctness gates, no timing targets:
    ``ShadowModel`` durability oracle.  Sharded traces give one shard an
    ENOSPC schedule and additionally gate ``try_recover``: degraded forks
    must refuse to clear on a still-failing device and must exit degraded
-   mode once it heals.
+   mode once it heals.  Replicated repair traces crash mid-repair and
+   mid-resync and hold the same oracle with ZERO reads lost (the
+   surviving replica answers through the blackout).
+5. **Self-healing repair** — under ``replication=2``, corruptions planted
+   on one replica's sealed segments must ALL be detected by one scrub
+   pass AND all be repaired from the healthy peer: while the repair
+   drains in bounded slices, every user read (the whole keyspace, every
+   slice boundary) must return the correct value — zero reads lost — and
+   afterwards the damaged shard must serve every planted key directly
+   with failover disabled, with both quarantines empty.
 
-Emits ``BENCH_faults.json`` (schema ``faults/v2``)::
+Emits ``BENCH_faults.json`` (schema ``faults/v3``)::
 
     {
-      "schema": "faults/v2",
+      "schema": "faults/v3",
       "fuzz": {"examples": 200, "violations": 0, "acked_total": ...,
                "degraded_runs": ..., "injected": {"eio": ..., ...}},
       "scrub": {"planted": ..., "found": ..., "false_positives": 0,
                 "detection_rate": 1.0},
       "degraded_serving": {"degraded": true, "reads_served": ...,
                            "writes_shed": ..., "writes_failed": ...},
+      "repair": {"planted": ..., "detected": ..., "repaired": ...,
+                 "detection_rate": 1.0, "repair_rate": 1.0,
+                 "reads_during_repair": ..., "reads_lost": 0,
+                 "verified_direct": ..., "quarantined_after": 0},
       "explorer": {"traces": 25, "fault_points": ..., "forks": ...,
                    "violations": 0, "unreached_points": 0,
                    "styles": {"clean": ..., "torn": ...},
                    "sharded": {"traces": 8, "fault_points": ...,
                                "degraded_forks": ..., "recovered": ...,
-                               "stayed_degraded": ...}}
+                               "stayed_degraded": ...},
+                   "repair_traces": {"traces": 2, "fault_points": ...,
+                                     "forks": ..., "violations": 0,
+                                     "lost_reads": 0}}
     }
 
-``python -m benchmarks.faults --smoke`` runs all four gates (``--seeds N``
+``python -m benchmarks.faults --smoke`` runs all five gates (``--seeds N``
 resizes the fuzz tier) and exits non-zero unless the invariant held on
 every schedule, the scrubber found 100% of planted corruptions, the
-degraded store kept serving reads, and the explorer found zero oracle
+degraded store kept serving reads, repair restored 100% of planted
+corruptions with zero reads lost, and the explorer found zero oracle
 violations at full fault-point coverage.  ``--smoke-explorer`` runs only a
 bounded fixed-seed explorer pass (CI budget: well under a minute) and
-prints the explored fault-point count.
+prints the explored fault-point count.  ``--smoke-repair`` runs only the
+replicated repair gate plus one bounded repair-trace exploration.
 """
 from __future__ import annotations
 
@@ -61,9 +79,9 @@ import shutil
 import tempfile
 
 from repro.core.tidestore import (DbConfig, DegradedError, FaultRule,
-                                  FaultyIo, KeyspaceConfig, TideDB,
-                                  random_schedule)
-from repro.core.tidestore.wal import HEADER_SIZE, WalConfig
+                                  FaultyIo, KeyspaceConfig, ReadOptions,
+                                  ShardedTideDB, TideDB, random_schedule)
+from repro.core.tidestore.wal import HEADER_SIZE, WalConfig, _ENTRY_HDR
 
 
 def _cfg(io=None, cache_bytes=1 * 1024 * 1024):
@@ -272,16 +290,133 @@ def _run_degraded_serving(csv=print) -> dict:
 
 
 # ------------------------------------------------------------------ gate 4
+def _run_repair(n_corruptions: int = 8, n_keys: int = 600,
+                csv=print) -> dict:
+    """Self-healing gate: plant corruptions on ONE replica of an R=2
+    store; scrub must find them all, ``RepairController`` must restore a
+    healthy copy onto the damaged shard from its peer, and no user read
+    may return a wrong answer at any point — before, during (between
+    bounded repair slices), or after the repair."""
+    d = tempfile.mkdtemp(prefix="bench-repair-")
+    no_failover = ReadOptions(strict_errors=True, fill_cache=False)
+    try:
+        sdb = ShardedTideDB(d, _cfg(cache_bytes=0), n_shards=2,
+                            replication=2)
+        keys = _keys(n_keys, "repair")
+        expect = {k: b"r" + k[:8] + b"%06d" % i
+                  for i, k in enumerate(keys)}
+        sdb.put_many(list(expect.items()))
+        sdb.flush()
+        damaged = sdb.shards[0]
+        wal = damaged.value_wal
+        seg_size = wal.cfg.segment_size
+        tail_seg = wal.tail // seg_size
+        # Every key is replicated onto shard 0; plant only in sealed
+        # segments (the scrubber's coverage) and only in the VALUE region,
+        # past the entry header and key bytes — replay and repair
+        # identification still see the true key, like real bitrot in a
+        # large value.
+        sealed = [k for k in keys
+                  if damaged.table.get_position(0, k) // seg_size
+                  < tail_seg]
+        rng = random.Random(42)
+        victims = rng.sample(sealed, n_corruptions)
+        planted = {}
+        for k in victims:
+            p = damaged.table.get_position(0, k)
+            fd = wal._fd(p // seg_size)
+            off = p % seg_size + HEADER_SIZE + _ENTRY_HDR.size + len(k) + 1
+            old = os.pread(fd, 1, off)
+            os.pwrite(fd, bytes([old[0] ^ 0x5A]), off)
+            planted[k] = p
+        sdb.clear_caches()
+
+        rep = sdb.scrub()
+        found = {f["pos"] for f in rep["findings"]
+                 if f["kind"] == "crc" and f["shard"] == 0}
+        detected = len(found & set(planted.values()))
+        false_pos = len(found - set(planted.values()))
+
+        # Drain the quarantine in bounded slices; between every slice the
+        # WHOLE keyspace must read back correctly through the store's
+        # public read path (failover covers what repair hasn't reached).
+        all_keys = list(keys)
+        want = [expect[k] for k in all_keys]
+        reads, lost = 0, 0
+        outcomes = {"examined": 0, "repaired": 0, "cas_lost": 0,
+                    "unrepaired": 0, "skipped": 0}
+
+        def sweep():
+            nonlocal reads, lost
+            got = sdb.multi_get(all_keys)
+            reads += len(all_keys)
+            lost += sum(1 for g, w in zip(got, want) if g != w)
+
+        sweep()                                  # during the damage window
+        while True:
+            step = sdb.repair_step(max_repairs=2)
+            for key_, n in step.items():
+                outcomes[key_] += n
+            sweep()                              # mid-repair reads
+            if step["examined"] == 0:
+                break
+
+        # Post-repair: the damaged shard serves every planted key
+        # DIRECTLY, failover disabled, and both quarantines are empty.
+        sdb.clear_caches()
+        verified = 0
+        for k in planted:
+            try:
+                if damaged.get(k, opts=no_failover) == expect[k]:
+                    verified += 1
+            except KeyError:
+                pass
+        quarantined_after = sum(len(sh.value_wal.quarantined())
+                                for sh in sdb.shards)
+        sdb.close()
+        out = {"planted": len(planted), "detected": detected,
+               "false_positives": false_pos,
+               "detection_rate": detected / len(planted),
+               "repaired": outcomes["repaired"],
+               "repair_rate": verified / len(planted),
+               "outcomes": outcomes,
+               "reads_during_repair": reads, "reads_lost": lost,
+               "verified_direct": verified,
+               "quarantined_after": quarantined_after}
+        csv(f"faults.repair,0,detected {detected}/{len(planted)} "
+            f"repaired={verified}/{len(planted)} "
+            f"reads={reads} lost={lost} "
+            f"quarantined_after={quarantined_after}")
+        return out
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def _repair_ok(rp: dict) -> bool:
+    return (rp["detection_rate"] == 1.0 and rp["false_positives"] == 0
+            and rp["repair_rate"] == 1.0 and rp["reads_lost"] == 0
+            and rp["reads_during_repair"] > 0
+            and rp["quarantined_after"] == 0)
+
+
+# ------------------------------------------------------------------ gate 5
 def _run_explorer(n_traces: int = 25, n_sharded: int = 8, csv=print,
-                  n_ops: int = 18, sharded_ops: int = 12) -> dict:
+                  n_ops: int = 18, sharded_ops: int = 12,
+                  n_repair: int = 2, repair_points: int = 12) -> dict:
     """Systematic crash-schedule exploration (``tidestore.simulate``).
 
     Every seeded trace is crashed at EVERY injectable I/O call it reaches
     — the meta-check is ``fork_points == range(fault_points)``: fork k
     really died at fault point k, so no point was silently skipped or
     swallowed.  Sharded traces run shard 0 under an ENOSPC schedule and
-    gate the ``try_recover`` contract on every degraded fork."""
-    from repro.core.tidestore.simulate import (explore_sharded_trace,
+    gate the ``try_recover`` contract on every degraded fork.  Repair
+    traces (replicated, R=2) plant corruption, scrub, repair, degrade,
+    and resync — crashing inside the repair pass and inside the resync
+    (meta-checked via ``phase_spans``) — and additionally require that no
+    mid-trace read was lost: the surviving replica answers through the
+    crash blackout."""
+    from repro.core.tidestore.simulate import (explore_repair_trace,
+                                               explore_sharded_trace,
                                                explore_trace)
     out = {
         "traces": n_traces, "fault_points": 0, "forks": 0,
@@ -291,6 +426,9 @@ def _run_explorer(n_traces: int = 25, n_sharded: int = 8, csv=print,
         "sharded": {"traces": n_sharded, "fault_points": 0, "forks": 0,
                     "degraded_forks": 0, "recovered": 0,
                     "stayed_degraded": 0, "violations": 0},
+        "repair_traces": {"traces": n_repair, "fault_points": 0,
+                          "forks": 0, "violations": 0, "lost_reads": 0,
+                          "phase_misses": 0},
     }
     for seed in range(n_traces):
         rep = explore_trace(seed, n_ops=n_ops)
@@ -315,6 +453,21 @@ def _run_explorer(n_traces: int = 25, n_sharded: int = 8, csv=print,
         out["violation_detail"].extend(rep["violations"][:3])
         if rep["fork_points"] != list(range(rep["fault_points"])):
             out["schedule_mismatches"] += 1
+    rt = out["repair_traces"]
+    for seed in range(n_repair):
+        rep = explore_repair_trace(seed, max_points=repair_points)
+        rt["fault_points"] += rep["fault_points"]
+        rt["forks"] += rep["forks"]
+        rt["violations"] += len(rep["violations"])
+        rt["lost_reads"] += rep["lost_reads"]
+        out["violation_detail"].extend(rep["violations"][:3])
+        # Meta-check: the trace's repair pass AND its post-recover resync
+        # both performed injectable I/O — crash-during-repair and
+        # crash-during-resync were genuinely explorable.
+        for phase in ("repair", "recover"):
+            lo, hi = rep["phase_spans"].get(phase, (0, 0))
+            if hi <= lo:
+                rt["phase_misses"] += 1
     out["violation_detail"] = out["violation_detail"][:5]
     csv(f"faults.explorer,0,{n_traces} traces fault_points="
         f"{out['fault_points']} forks={out['forks']} "
@@ -325,11 +478,16 @@ def _run_explorer(n_traces: int = 25, n_sharded: int = 8, csv=print,
         f"recovered={sh['recovered']} "
         f"stayed_degraded={sh['stayed_degraded']} "
         f"violations={sh['violations']}")
+    csv(f"faults.explorer.repair,0,{n_repair} traces fault_points="
+        f"{rt['fault_points']} forks={rt['forks']} "
+        f"violations={rt['violations']} lost_reads={rt['lost_reads']} "
+        f"phase_misses={rt['phase_misses']}")
     return out
 
 
 def _explorer_ok(ex: dict) -> bool:
     sh = ex["sharded"]
+    rt = ex["repair_traces"]
     return (ex["violations"] == 0 and sh["violations"] == 0
             and ex["unreached_points"] == 0
             and ex["schedule_mismatches"] == 0
@@ -337,7 +495,10 @@ def _explorer_ok(ex: dict) -> bool:
             and ex["forks"] == ex["fault_points"]
             and len(ex["styles"]) >= 2
             and sh["degraded_forks"] > 0
-            and sh["recovered"] == sh["degraded_forks"])
+            and sh["recovered"] == sh["degraded_forks"]
+            and rt["violations"] == 0 and rt["lost_reads"] == 0
+            and rt["phase_misses"] == 0
+            and (rt["traces"] == 0 or rt["forks"] > 0))
 
 
 # ---------------------------------------------------------------- harness
@@ -345,10 +506,11 @@ def run(n_seeds: int = 200, csv=print,
         json_path: str | None = "BENCH_faults.json",
         explorer_traces: int = 25, explorer_sharded: int = 8) -> dict:
     report = {
-        "schema": "faults/v2",
+        "schema": "faults/v3",
         "fuzz": _run_fuzz(n_seeds, csv),
         "scrub": _run_scrub_detection(csv=csv),
         "degraded_serving": _run_degraded_serving(csv=csv),
+        "repair": _run_repair(csv=csv),
         "explorer": _run_explorer(n_traces=explorer_traces,
                                   n_sharded=explorer_sharded, csv=csv),
     }
@@ -362,8 +524,9 @@ def run(n_seeds: int = 200, csv=print,
 def run_smoke(csv=print, n_seeds: int = 200) -> bool:
     """CI gates: durability invariant on every schedule, 100% scrub
     detection with zero false positives, a full disk leaves a
-    read-serving (write-shedding) store, and the crash-schedule explorer
-    holds the oracle at every reachable fault point."""
+    read-serving (write-shedding) store, replicated repair restores every
+    planted corruption without losing a read, and the crash-schedule
+    explorer holds the oracle at every reachable fault point."""
     report = run(n_seeds=n_seeds, csv=csv, json_path="BENCH_faults.json")
     fz, sc, dg = (report["fuzz"], report["scrub"],
                   report["degraded_serving"])
@@ -374,11 +537,12 @@ def run_smoke(csv=print, n_seeds: int = 200) -> bool:
     serving = (dg["degraded"] and dg["writes_shed"] > 0
                and dg["reads_served"] == dg["reads_expected"]
                and dg["reads_served"] > 0)
+    repair = _repair_ok(report["repair"])
     explorer = _explorer_ok(report["explorer"])
-    ok = invariant and detection and serving and explorer
+    ok = invariant and detection and serving and repair and explorer
     csv(f"faults.smoke,0,{'ok' if ok else 'FAIL'} "
         f"(invariant={invariant} detection={detection} serving={serving} "
-        f"explorer={explorer})")
+        f"repair={repair} explorer={explorer})")
     return ok
 
 
@@ -400,6 +564,30 @@ def run_smoke_explorer(csv=print, n_traces: int = 3,
     return ok
 
 
+def run_smoke_repair(csv=print) -> bool:
+    """Bounded repair-only CI gate: the replicated repair gate (planted
+    corruptions on one replica of an R=2 store: 100% detected AND
+    repaired, zero reads lost during the repair window) plus one
+    fixed-seed repair-trace exploration crashing inside the repair pass
+    and the resync."""
+    from repro.core.tidestore.simulate import explore_repair_trace
+    rp = _run_repair(csv=csv)
+    trace = explore_repair_trace(0, max_points=10)
+    spans_ok = all(hi > lo for lo, hi in
+                   (trace["phase_spans"].get(p, (0, 0))
+                    for p in ("repair", "recover")))
+    ok = (_repair_ok(rp) and trace["violations"] == []
+          and trace["lost_reads"] == 0 and trace["forks"] > 0
+          and spans_ok)
+    csv(f"faults.smoke_repair,0,{'ok' if ok else 'FAIL'} "
+        f"repaired={rp['verified_direct']}/{rp['planted']} "
+        f"reads_lost={rp['reads_lost']} "
+        f"trace_forks={trace['forks']} "
+        f"trace_violations={len(trace['violations'])} "
+        f"trace_lost_reads={trace['lost_reads']}")
+    return ok
+
+
 if __name__ == "__main__":
     import argparse
     import sys
@@ -418,12 +606,20 @@ if __name__ == "__main__":
                          "fault point, prints the explored fault-point "
                          "count; exits 1 on any oracle violation or "
                          "unreached point")
+    ap.add_argument("--smoke-repair", action="store_true",
+                    help="bounded repair-only gate: planted corruptions "
+                         "on one replica of an R=2 store must be 100%% "
+                         "detected and repaired with zero reads lost, "
+                         "and a repair-bearing crash trace must hold the "
+                         "durability oracle; exits 1 otherwise")
     ap.add_argument("--seeds", type=int, default=200, metavar="N",
                     help="fuzz-schedule seed count for the full run / "
                          "--smoke (default: 200)")
     args = ap.parse_args()
     if args.smoke_explorer:
         sys.exit(0 if run_smoke_explorer() else 1)
+    if args.smoke_repair:
+        sys.exit(0 if run_smoke_repair() else 1)
     if args.smoke:
         sys.exit(0 if run_smoke(n_seeds=args.seeds) else 1)
     run(n_seeds=args.seeds)

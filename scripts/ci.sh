@@ -64,6 +64,15 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.faults --smoke
 # bounded well under a minute.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.faults --smoke-explorer
 
+# Self-healing repair smoke: with replication=2, corruptions planted on
+# one replica's sealed segments must be 100% detected by one scrub pass
+# and 100% repaired from the healthy peer (verified by direct reads with
+# failover disabled), with zero user reads lost during the repair window
+# and both quarantines empty afterwards; a repair-bearing crash trace
+# (crashing inside the repair pass and inside the degraded-shard resync)
+# must hold the durability oracle with zero lost reads.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.faults --smoke-repair
+
 # Overload smoke: under 4x sustained overload the admission controller must
 # keep queue depth and accounted cost at/below the watermark while the
 # admitted stream keeps being served, the no-admission baseline must be

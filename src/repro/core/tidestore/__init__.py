@@ -11,11 +11,13 @@ from .index import (HeaderLookup, OptimisticLookup, serialize_header,
                     serialize_optimistic)
 from .large_table import CellState, KeyspaceConfig, LargeTable
 from .relocate import Decision, PruneController, PruneThread, Relocator
-from .scrub import Scrubber, ScrubThread, read_scrub_table
+from .repair import RepairController, read_repair_table
+from .scrub import ScrubConfig, Scrubber, ScrubThread, read_scrub_table
 from .shard import ShardedTideDB
 from .simulate import (CrashPointIo, ShadowModel, SimulatedCrash, TraceOp,
-                       apply_op, explore_sharded_trace, explore_trace,
-                       explorer_config, generate_trace, run_trace)
+                       apply_op, explore_repair_trace, explore_sharded_trace,
+                       explore_trace, explorer_config, generate_repair_trace,
+                       generate_trace, run_trace)
 from .system import (SYSTEM_KEYSPACE, SYSTEM_KS_ID, CopierGovernor,
                      StatsCollector,
                      decode_row_key, read_tables, row_key,
@@ -37,8 +39,10 @@ __all__ = [
     "IoBackend", "FaultyIo", "FaultRule", "random_schedule",
     "WalReadError", "CorruptionError", "TornRecordError", "WalHoleError",
     "UnrepairedHoleError", "DegradedError", "KeyWidthError",
-    "Scrubber", "ScrubThread", "read_scrub_table",
+    "Scrubber", "ScrubThread", "ScrubConfig", "read_scrub_table",
+    "RepairController", "read_repair_table",
     "SimulatedCrash", "CrashPointIo", "ShadowModel", "TraceOp",
     "generate_trace", "run_trace", "apply_op", "explorer_config",
     "explore_trace", "explore_sharded_trace",
+    "generate_repair_trace", "explore_repair_trace",
 ]

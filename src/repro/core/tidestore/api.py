@@ -50,10 +50,18 @@ class ReadOptions:
       mid-batch.  Capture the pin with ``Engine.min_live()``.  Pinned
       reads bypass the value cache (cached values carry no position to
       check against the pin).
+    - ``strict_errors``: surface unreadable live positions as the typed
+      ``WalReadError`` taxonomy instead of the fail-safe ``None``.
+      ``get`` raises; ``multi_get`` places the exception *instance* in
+      that key's result slot (the rest of the batch still resolves).  The
+      replicated read path (``ShardedTideDB`` failover) reads with this
+      set so a corrupt primary copy routes the key to a replica rather
+      than silently reporting absence.
     """
     fill_cache: bool = True
     use_kernel: Optional[bool] = None
     min_live_pin: Optional[int] = None
+    strict_errors: bool = False
 
 
 @dataclass(frozen=True)

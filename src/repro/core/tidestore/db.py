@@ -25,12 +25,12 @@ from .api import (KeyspaceHandle, PruneOptions, ReadOptions, WriteBatch,
                   WriteOptions, coerce_batch)
 from .cache import LruCache
 from .faults import (DEFAULT_IO, DegradedError, IoBackend, KeyWidthError,
-                     UnrepairedHoleError)
+                     UnrepairedHoleError, WalReadError)
 from .flush import Flusher
 from .index import TOMB_FLAG, is_tombstone, real_pos
 from .large_table import CellState, KeyspaceConfig, LargeTable
 from .relocate import PruneController, PruneThread, Relocator
-from .scrub import Scrubber, ScrubThread
+from .scrub import ScrubConfig, Scrubber, ScrubThread
 from .snapshot import (SnapshotThread, capture_state, read_control_region,
                        write_control_region)
 from .system import (SYSTEM_KEYSPACE, SYSTEM_KS_ID, TAG_HEALTH,
@@ -101,6 +101,8 @@ class DbConfig:
                                            # (tests inject faults.FaultyIo)
     scrub: bool = False                    # background CRC scrub thread
     scrub_interval_s: float = 5.0          # one scrub_step per interval
+    scrub_cfg: Optional["ScrubConfig"] = None  # findings cap / publish policy;
+                                           # None = ScrubConfig() defaults
 
 
 class TideDB:
@@ -201,7 +203,7 @@ class TideDB:
 
         # Corruption scrubber (integrity subsystem): always constructed so
         # scrub()/scrub_step() work on demand; the thread is opt-in.
-        self.scrubber = Scrubber(self)
+        self.scrubber = Scrubber(self, config=self.cfg.scrub_cfg)
         self._snapshot_thread = None
         if self.cfg.background_snapshots:
             self._snapshot_thread = SnapshotThread(self, self.cfg.snapshot_interval_s)
@@ -383,6 +385,14 @@ class TideDB:
     @property
     def degraded(self) -> bool:
         return self._degraded_reason is not None
+
+    @property
+    def writable(self) -> bool:
+        """True while this store can accept writes.  For a single store
+        this is just "not degraded"; ShardedTideDB overrides the notion
+        ring-wise so a replicated store with one degraded shard still
+        reports writable (writes shed to ring peers)."""
+        return self._degraded_reason is None
 
     @property
     def degraded_reason(self) -> Optional[str]:
@@ -730,6 +740,7 @@ class TideDB:
                 self.metrics.add(cache_hits=1)
                 return v
         self.metrics.add(cache_misses=1)
+        last_err: Optional[WalReadError] = None
         for _attempt in range(2):           # retry once across concurrent GC
             pos = self.table.get_position(ks_id, key)
             if pos is None or pos < min_live \
@@ -737,14 +748,24 @@ class TideDB:
                 return None                  # absent or epoch-pruned
             try:
                 rtype, payload = self.value_wal.read_record(pos)
-            except KeyError:
+            except WalReadError as e:
+                last_err = e
                 continue                     # relocated underneath us: retry
+            except KeyError:
+                continue
             if rtype == T_TOMBSTONE:
                 return None
             _, _, value, _ = decode_entry(payload)
             if opts.fill_cache:
                 self.cache.put(ck, value)
             return value
+        # Both attempts resolved a live position and failed to read it:
+        # that is real unreadability (corrupt/torn bytes, dead device), not
+        # a relocation race.  The default stays fail-safe None; a strict
+        # caller (the replicated failover path) gets the typed error so it
+        # can route the key to a replica.
+        if opts.strict_errors and last_err is not None:
+            raise last_err
         return None
 
     def exists(self, key: bytes, keyspace=0,
@@ -812,8 +833,19 @@ class TideDB:
             rec = records.get(pos)
             if rec is None:
                 # Relocated underneath us: the scalar path re-resolves.
+                # Under strict_errors the scalar retry surfaces persistent
+                # unreadability as the typed error, embedded per-slot so
+                # one corrupt key cannot fail the whole batch (the
+                # failover layer retries exactly those slots on replicas).
                 for i in slots:
-                    results[i] = self.get(keys[i], keyspace, opts=opts)
+                    if opts.strict_errors:
+                        try:
+                            results[i] = self.get(keys[i], keyspace,
+                                                  opts=opts)
+                        except WalReadError as e:
+                            results[i] = e
+                    else:
+                        results[i] = self.get(keys[i], keyspace, opts=opts)
                 continue
             rtype, payload = rec
             if rtype == T_TOMBSTONE:

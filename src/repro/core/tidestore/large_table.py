@@ -262,15 +262,23 @@ class LargeTable:
             self._bump_mem(mem_delta)
         return changed
 
-    def compare_and_set(self, ks_id: int, key: bytes, expect_pos: int,
+    def compare_and_set(self, ks_id: int, key: bytes,
+                        expect_pos: Optional[int],
                         new_marker: int) -> bool:
         """Relocation CAS (§4.4): update only if the key still points at
-        ``expect_pos``; a concurrent write to a higher position wins."""
+        ``expect_pos``; a concurrent write to a higher position wins.
+        ``expect_pos=None`` means "only while still absent" — the repair
+        path's insert CAS for keys whose corrupt record was dropped at
+        replay (the index holds nothing, so any concurrent foreground
+        write makes the slot non-absent and the repair copy loses)."""
         ks = self.ks(ks_id)
         cell = ks.cell_for_key(key)
         with ks.row_lock(cell.cell_id):
             cur, _ = self._position_locked(ks, cell, key)
-            if cur is None or real_pos(cur) != expect_pos:
+            if expect_pos is None:
+                if cur is not None:
+                    return False
+            elif cur is None or real_pos(cur) != expect_pos:
                 return False
             if cell.mem.get(key) is None:
                 self._bump_mem(1)

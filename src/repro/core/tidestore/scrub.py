@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import threading
 import time
+from dataclasses import dataclass
 from typing import Optional
 
 import msgpack
@@ -27,10 +28,23 @@ from .system import TAG_SCRUB, row_key, scan_rows
 from .util import crc32
 from .wal import HEADER_SIZE, T_FILTER, T_PAD, _HDR
 
-# Cap on per-pass findings persisted to __system: corruption is normally
-# rare; a rotted disk producing thousands of findings should not bloat the
-# WAL with its own damage report.
+# Default cap on per-pass findings persisted to __system: corruption is
+# normally rare; a rotted disk producing thousands of findings should not
+# bloat the WAL with its own damage report.  Tunable per store via
+# ``ScrubConfig.max_findings`` (``DbConfig.scrub_cfg``).
 MAX_PUBLISHED_FINDINGS = 32
+
+
+@dataclass
+class ScrubConfig:
+    """Scrubber policy knobs (``DbConfig.scrub_cfg``).
+
+    - ``max_findings``: per-pass cap on finding rows persisted to
+      ``__system``.  Findings beyond the cap are still counted and
+      quarantined — only their individual rows are elided.
+    """
+
+    max_findings: int = MAX_PUBLISHED_FINDINGS
 
 
 class Scrubber:
@@ -38,12 +52,17 @@ class Scrubber:
 
     Holds a resume cursor so ``scrub_step`` spreads one full pass over many
     idle ticks; a completed pass publishes a summary (and the most recent
-    findings) into ``__system`` and bumps ``scrub_passes``.
+    findings) into ``__system`` and bumps ``scrub_passes``.  Findings whose
+    position has since been repaired (``Wal.mark_repaired``) age out: the
+    next completed pass neither re-reports them nor leaves their stale rows
+    in ``__system``.
     """
 
-    def __init__(self, db, *, publish: bool = True):
+    def __init__(self, db, *, publish: bool = True,
+                 config: Optional[ScrubConfig] = None):
         self.db = db
         self.publish = publish
+        self.cfg = config or ScrubConfig()
         self._lock = threading.Lock()      # one scrub slice at a time
         self._cursor: Optional[int] = None  # next segment index to verify
         self._prev_published = 0           # finding rows currently persisted
@@ -73,6 +92,7 @@ class Scrubber:
         end = pos + seg_size
         checked = 0
         findings: list[dict] = []
+        repaired = wal.repaired()
         while pos < end:
             if end - pos < HEADER_SIZE:
                 break
@@ -104,8 +124,14 @@ class Scrubber:
                 break
             checked += 1
             if len(payload) < length or crc32(payload) != crc:
-                findings.append({"pos": pos, "segment": seg, "kind": "crc"})
-                wal._quarantine_pos(pos)
+                if pos not in repaired:
+                    # Repaired carcasses stay corrupt on disk until segment
+                    # GC reclaims them; re-reporting (or re-quarantining)
+                    # known-dead bytes would keep resolved findings alive
+                    # in __system forever.
+                    findings.append({"pos": pos, "segment": seg,
+                                     "kind": "crc"})
+                    wal._quarantine_pos(pos)
             pos = nxt
         return checked, findings
 
@@ -199,7 +225,7 @@ class Scrubber:
             "quarantined": len(db.value_wal.quarantined()),
             "last_pass_at": self.last_pass_at,
         }, use_bin_type=True))]
-        ranked = report["findings"][:MAX_PUBLISHED_FINDINGS]
+        ranked = report["findings"][:self.cfg.max_findings]
         for rank, f in enumerate(ranked):
             rows.append((row_key(TAG_SCRUB, 0, rank + 1),
                          msgpack.packb(f, use_bin_type=True)))

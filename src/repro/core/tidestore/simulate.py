@@ -59,12 +59,12 @@ import zlib
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-from .api import PruneOptions, WriteBatch, WriteOptions
+from .api import PruneOptions, ReadOptions, WriteBatch, WriteOptions
 from .db import DbConfig, TideDB
 from .faults import DEFAULT_IO, DegradedError, IoBackend
 from .large_table import KeyspaceConfig
 from .shard import ShardedTideDB
-from .wal import WalConfig
+from .wal import HEADER_SIZE, WalConfig, _ENTRY_HDR
 
 KEY_LEN = 8
 KEYSPACES = ("alpha", "beta")
@@ -863,6 +863,350 @@ def explore_sharded_trace(seed: int, *, n_shards: int = 3, n_ops: int = 12,
             else:
                 fio.heal()
             fsdb.close()
+            shutil.rmtree(fdir, ignore_errors=True)
+    finally:
+        if owns_base:
+            shutil.rmtree(base, ignore_errors=True)
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Replicated repair/resync exploration (crash DURING the self-healing loop)
+# ---------------------------------------------------------------------------
+
+# The repair trace runs on a fixed 2-shard / replication=2 store: every key
+# lives on both shards, shard 0 carries the fault schedule, shard 1 stays
+# healthy — so any single fault leaves one readable copy of everything.
+REPAIR_TRACE_SHARDS = 2
+
+
+def generate_repair_trace(seed: int, *, n_keys: int = 8) -> list:
+    """Scripted replicated-store workload exercising the whole self-healing
+    loop, as ``TraceOp``s.  Beyond the base write kinds it uses:
+
+    - ``reads``: live legality check (scalar + ``multi_get`` parity) for
+      every (ks, key) in ``items`` — the zero-reads-lost probe.
+    - ``plant``: flip one VALUE byte of each ``items`` key's record on
+      shard 0's WAL (driver-side ``os.pwrite``, invisible to the fault
+      schedule), then drop caches.
+    - ``scrub`` / ``repair``: one full detection pass / one full
+      ``RepairController`` pass.  After an uncrashed repair the driver
+      additionally direct-reads shard 0 with failover disabled and asserts
+      the quarantine drained.
+    - ``degrade`` / ``recover``: force shard 0 degraded (writes shed to
+      resync debt), then ``try_recover`` + anti-entropy resync.
+
+    The script's phases are ordered so a fault point can land inside
+    foreground writes, failover reads, scrub, repair, degraded serving,
+    resync, or the final ack — ``explore_repair_trace`` records the
+    repair/resync fault-point spans so coverage is checkable.
+    """
+    rng = random.Random(seed)
+    prim0: List[bytes] = []            # keys whose primary is shard 0
+    prim1: List[bytes] = []
+    want1 = max(2, n_keys // 2)
+    i = 0
+    while len(prim0) < n_keys or len(prim1) < want1:
+        k = key_of(i)
+        if (zlib.crc32(k) * REPAIR_TRACE_SHARDS) >> 32 == 0:
+            if len(prim0) < n_keys:
+                prim0.append(k)
+        elif len(prim1) < want1:
+            prim1.append(k)
+        i += 1
+    versions: Dict[bytes, int] = {}
+
+    def fresh(key: bytes) -> bytes:
+        v = versions.get(key, 0) + 1
+        versions[key] = v
+        return _value(rng, seed, key, v)
+
+    every = (tuple(("alpha", k) for k in prim0)
+             + tuple(("beta", k) for k in prim1))
+    return [
+        TraceOp("put_many", "alpha",
+                items=tuple((k, fresh(k)) for k in prim0)),
+        TraceOp("put_many", "beta",
+                items=tuple((k, fresh(k)) for k in prim1)),
+        # Single-primary batch: replicated write_batch keeps atomicity per
+        # shard per copy, so keys sharing a primary stay torn-proof even
+        # when post-crash reads resolve through that one primary.
+        TraceOp("write_batch", "alpha",
+                batch=tuple(("put", "alpha", k, fresh(k))
+                            for k in prim0[-2:])),
+        TraceOp("flush"),                      # ack: everything above
+        TraceOp("reads", items=every),
+        TraceOp("plant", "alpha", items=tuple(prim0[:3])),
+        TraceOp("reads", items=every),         # failover window: zero lost
+        TraceOp("scrub"),
+        TraceOp("repair"),
+        TraceOp("reads", items=every),
+        TraceOp("degrade"),
+        TraceOp("put_many", "alpha",           # shed on shard 0 → debt
+                items=tuple((k, fresh(k)) for k in prim0[:4])),
+        TraceOp("put", "beta", items=((prim1[0], fresh(prim1[0])),)),
+        TraceOp("reads", items=every),         # degraded window
+        TraceOp("recover"),                    # try_recover + resync
+        TraceOp("reads", items=every),
+        TraceOp("flush"),                      # ack: resynced writes too
+    ]
+
+
+def _run_repair_trace(sdb: ShardedTideDB, trace: Sequence[TraceOp],
+                      model: ShadowModel,
+                      io: Optional[CrashPointIo],
+                      spans: Optional[dict] = None) -> dict:
+    """Drive one repair trace end to end.  The script NEVER aborts on a
+    crash: the fault kills shard 0's device only, and the replicated store
+    is supposed to keep serving — post-fault ops continue, with shard-0
+    failures shed/failed-over and acks suppressed (a flush that cannot
+    reach shard 0 guarantees nothing about it).  Returns
+    ``{"violations", "lost_reads"}``."""
+    violations: List[str] = []
+    lost_reads = 0
+    planted = [(op.ks, k) for op in trace if op.kind == "plant"
+               for k in op.items]
+
+    def crashed() -> bool:
+        return io is not None and io.crashed_at is not None
+
+    for i, op in enumerate(trace):
+        calls_before = io.calls if io is not None else 0
+        try:
+            if op.kind == "put":
+                key, value = op.items[0]
+                model.apply_put(op.ks, key, value)
+                sdb.put(key, value, keyspace=op.ks, opts=WriteOptions(
+                    epoch=op.epoch,
+                    durability="sync" if op.sync else "async"))
+                if op.sync and not crashed():
+                    model.ack()
+            elif op.kind == "put_many":
+                for key, value in op.items:
+                    model.apply_put(op.ks, key, value)
+                sdb.put_many(list(op.items), keyspace=op.ks, epoch=op.epoch)
+            elif op.kind == "write_batch":
+                model.apply_batch(op.batch)
+                wb = WriteBatch()
+                for o in op.batch:
+                    if o[0] == "put":
+                        wb.put(o[2], o[3], keyspace=o[1])
+                    else:
+                        wb.delete(o[2], keyspace=o[1])
+                sdb.write_batch(wb, epoch=op.epoch)
+            elif op.kind == "flush":
+                sdb.flush()
+                if not crashed():
+                    model.ack()
+            elif op.kind == "reads":
+                lost_reads += _repair_reads_check(sdb, model, op, i,
+                                                  crashed, violations)
+            elif op.kind == "plant":
+                _plant_corruption(sdb, op)
+            elif op.kind == "scrub":
+                sdb.scrub()
+            elif op.kind == "repair":
+                sdb.repair()
+                if not crashed():
+                    _check_repaired_shard(sdb, model, planted, i,
+                                          violations)
+            elif op.kind == "degrade":
+                sdb.shards[0]._enter_degraded(
+                    "repair trace: forced outage")
+            elif op.kind == "recover":
+                ok = sdb.try_recover(min_retry_interval_s=0.0)
+                if not crashed():
+                    if not ok:
+                        violations.append(
+                            f"op {i}: try_recover failed on a healthy "
+                            f"device")
+                    elif sdb.stats()["resync_backlog"]:
+                        violations.append(
+                            f"op {i}: resync left backlog "
+                            f"{sdb.stats()['resync_backlog']}")
+            else:
+                raise ValueError(f"unknown repair-trace op {op.kind!r}")
+        except SimulatedCrash:
+            pass          # shard 0's device died mid-op; the store lives on
+        except Exception as e:
+            if not crashed():
+                violations.append(
+                    f"op {i} ({op.kind}) failed without a crash: {e!r}")
+        if spans is not None and io is not None \
+                and op.kind in ("repair", "recover"):
+            spans[op.kind] = (calls_before, io.calls)
+    return {"violations": violations, "lost_reads": lost_reads}
+
+
+def _repair_reads_check(sdb, model, op, i, crashed, violations) -> int:
+    """Scalar + batched legality for every (ks, key): no read may raise,
+    and every observation must be in the oracle's legal set.  Reads that
+    raise after the device died are counted, not flagged (the post-reopen
+    oracle judges final state)."""
+    lost = 0
+    by_ks: Dict[str, List[bytes]] = {}
+    for ks, key in op.items:
+        by_ks.setdefault(ks, []).append(key)
+        try:
+            obs = sdb.get(key, keyspace=ks)
+        except Exception as e:
+            if crashed():
+                lost += 1
+                continue
+            violations.append(f"op {i}: get({ks}/{key!r}) raised {e!r}")
+            continue
+        if obs not in model.legal_states(ks, key):
+            violations.append(
+                f"op {i}: illegal read {ks}/{key!r}: {_describe(obs)}")
+    for ks, kk in by_ks.items():
+        try:
+            got = sdb.multi_get(kk, keyspace=ks)
+        except Exception as e:
+            if crashed():
+                lost += len(kk)
+                continue
+            violations.append(f"op {i}: multi_get({ks}) raised {e!r}")
+            continue
+        for key, obs in zip(kk, got):
+            if obs not in model.legal_states(ks, key):
+                violations.append(
+                    f"op {i}: multi_get disagrees for {ks}/{key!r}: "
+                    f"{_describe(obs)}")
+    return lost
+
+
+def _plant_corruption(sdb: ShardedTideDB, op: TraceOp) -> None:
+    """Flip one VALUE byte of each key's record on shard 0, bypassing the
+    fault schedule (``os.pwrite`` on the raw fd — latent disk rot, not an
+    injected fault).  Value region only: the entry header and key bytes
+    stay intact, so crash replay and repair identification both see the
+    true key."""
+    sh = sdb.shards[0]
+    ks_id = sh._ks_id(op.ks)
+    seg_size = sh.value_wal.cfg.segment_size
+    for key in op.items:
+        pos = sh.table.get_position(ks_id, key)
+        if pos is None:
+            continue      # never landed on shard 0 (early-crash forks)
+        fd = sh.value_wal._fd(pos // seg_size)
+        off = (pos % seg_size + HEADER_SIZE + _ENTRY_HDR.size
+               + len(key) + 1)
+        cur = os.pread(fd, 1, off)
+        if cur:
+            os.pwrite(fd, bytes((cur[0] ^ 0x5A,)), off)
+    sdb.clear_caches()
+
+
+def _check_repaired_shard(sdb, model, planted, i, violations) -> None:
+    """After an uncrashed repair pass: shard 0 must serve every planted key
+    by itself (failover disabled via a direct shard read) and its
+    quarantine must be empty."""
+    if sdb.shards[0].value_wal.quarantined():
+        violations.append(
+            f"op {i}: quarantine not drained by repair: "
+            f"{sorted(sdb.shards[0].value_wal.quarantined())}")
+    strict = ReadOptions(strict_errors=True, fill_cache=False)
+    for ks, key in planted:
+        try:
+            obs = sdb.shards[0].get(key, keyspace=ks, opts=strict)
+        except Exception as e:
+            violations.append(
+                f"op {i}: shard-0 read after repair raised {e!r} "
+                f"for {ks}/{key!r}")
+            continue
+        if obs not in model.legal_states(ks, key):
+            violations.append(
+                f"op {i}: shard-0 state after repair illegal for "
+                f"{ks}/{key!r}: {_describe(obs)}")
+
+
+def explore_repair_trace(seed: int, *, n_keys: int = 8,
+                         base_dir: Optional[str] = None,
+                         styles: Sequence[str] = CRASH_STYLES,
+                         max_points: Optional[int] = None) -> dict:
+    """Crash-at-every-point exploration of the replicated self-healing
+    loop (2 shards, replication=2, shard 0 faulted).
+
+    Discovery runs ``generate_repair_trace`` clean and records the
+    fault-point spans of the repair and resync phases
+    (``phase_spans["repair"]`` / ``phase_spans["recover"]``) — a meta-check
+    that both phases actually perform injectable I/O, so forks genuinely
+    crash *inside* repair and resync.  Each fork crashes shard 0 at one
+    point (styles alternate), runs the script to completion on the
+    surviving replica, then simulates whole-machine death: ``crash()``,
+    heal, reopen replicated, ``scrub()`` + ``repair()``, and checks every
+    key against the ``ShadowModel`` — both before and after the post-crash
+    repair round, so repair can never "fix" a store into an illegal state.
+    """
+    trace = generate_repair_trace(seed, n_keys=n_keys)
+    base = base_dir or tempfile.mkdtemp(prefix=f"tide-rexplore-{seed}-")
+    owns_base = base_dir is None
+    report = {"seed": seed, "ops": len(trace), "fault_points": 0,
+              "forks": 0, "style_counts": {}, "violations": [],
+              "fork_points": [], "phase_spans": {}, "lost_reads": 0}
+
+    def _build(path, io0):
+        return ShardedTideDB(path, explorer_config(None),
+                             n_shards=REPAIR_TRACE_SHARDS, replication=2,
+                             shard_ios=[io0, None])
+
+    try:
+        # -- discovery ------------------------------------------------------
+        dio = CrashPointIo(seed=seed)
+        ddir = os.path.join(base, "discover")
+        sdb = _build(ddir, dio)
+        dio.arm(None)
+        spans: dict = {}
+        res = _run_repair_trace(sdb, trace, ShadowModel(), dio, spans=spans)
+        if res["violations"]:
+            raise AssertionError(
+                "repair-trace discovery run violated the oracle: "
+                + "; ".join(res["violations"][:3]))
+        n_points = dio.calls
+        dio.disarm()
+        sdb.close()
+        shutil.rmtree(ddir)
+        report["fault_points"] = n_points
+        report["phase_spans"] = {k: list(v) for k, v in spans.items()}
+
+        # -- forks ----------------------------------------------------------
+        points = range(n_points) if max_points is None \
+            else range(0, n_points, max(1, n_points // max_points))
+        for p in points:
+            style = styles[p % len(styles)]
+            report["style_counts"][style] = \
+                report["style_counts"].get(style, 0) + 1
+            fdir = os.path.join(base, f"fork-{p:05d}")
+            fio = CrashPointIo(seed=seed * 1_000_003 + p)
+            fsdb = _build(fdir, fio)
+            fio.arm(p, style)
+            model = ShadowModel()
+            res = _run_repair_trace(fsdb, trace, model, fio)
+            report["forks"] += 1
+            report["fork_points"].append(fio.crashed_at)
+            report["lost_reads"] += res["lost_reads"]
+            report["violations"].extend(
+                f"seed {seed} point {p} ({style}): {v}"
+                for v in res["violations"])
+            fsdb.crash()                    # now the whole machine dies
+            fio.heal()
+            try:
+                vdb = _build(fdir, None)
+            except Exception as e:
+                report["violations"].append(
+                    f"seed {seed} point {p} ({style}): reopen after crash "
+                    f"failed: {e!r}")
+            else:
+                vs = model.check(vdb, label="post-crash ")
+                try:
+                    vdb.scrub()
+                    vdb.repair()
+                except Exception as e:
+                    vs.append(f"post-crash scrub/repair raised {e!r}")
+                vs.extend(model.check(vdb, label="post-repair "))
+                report["violations"].extend(
+                    f"seed {seed} point {p} ({style}): {v}" for v in vs)
+                vdb.close()
             shutil.rmtree(fdir, ignore_errors=True)
     finally:
         if owns_base:

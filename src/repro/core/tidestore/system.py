@@ -67,12 +67,14 @@ SYSTEM_KS_ID = 0xFFFF
 TAG_KEYSPACE_STATS = 1
 TAG_LARGE_VALUES = 2
 TAG_HOT_CELLS = 3
-# Tags 4/5 are written by the integrity subsystem (scrub.py) and the
-# degraded-mode transition; they are deliberately NOT in TABLES — the
-# workload-rollup readers (read_tables / system_tables) keep their shape,
-# and scrub findings have their own reader (scrub.read_scrub_table).
+# Tags 4/5/6 are written by the integrity subsystem (scrub.py / repair.py)
+# and the degraded-mode transition; they are deliberately NOT in TABLES —
+# the workload-rollup readers (read_tables / system_tables) keep their
+# shape, and scrub/repair findings have their own readers
+# (scrub.read_scrub_table, repair.read_repair_table).
 TAG_SCRUB = 4
 TAG_HEALTH = 5
+TAG_REPAIR = 6
 TABLES = {"keyspace_stats": TAG_KEYSPACE_STATS,
           "large_values": TAG_LARGE_VALUES,
           "hot_cells": TAG_HOT_CELLS}

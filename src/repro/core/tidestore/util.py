@@ -132,6 +132,14 @@ class Metrics:
     degraded_recoveries: int = 0       # degraded -> ok via try_recover
     recover_probes: int = 0            # try_recover disk re-probes attempted
     recover_probes_skipped: int = 0    # re-probes refused by the rate limit
+    read_failovers: int = 0            # replicated reads served off-primary
+    replica_write_misses: int = 0      # replica writes shed to resync debt
+    repaired_positions: int = 0        # quarantined positions cleared by repair
+    repair_appends: int = 0            # healthy copies re-appended by repair
+    repair_cas_fail: int = 0           # repairs lost to a concurrent write
+    repair_fetch_failures: int = 0     # repairs with no healthy peer copy
+    resync_records: int = 0            # records replayed into a rejoined shard
+    resync_runs: int = 0               # anti-entropy resyncs completed
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def add(self, **kwargs: int) -> None:

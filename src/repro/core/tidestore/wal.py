@@ -321,6 +321,7 @@ class Wal:
         # __system can report them.  {pos: observation count}.
         self._quarantine_lock = threading.Lock()
         self._quarantine: dict[int, int] = {}
+        self._repaired: set[int] = set()
 
         self._alloc_lock = threading.Lock()
         self._fd_lock = threading.Lock()
@@ -866,15 +867,46 @@ class Wal:
 
     def _quarantine_pos(self, pos: int) -> None:
         with self._quarantine_lock:
+            if pos in self._repaired:
+                # Already repaired: the index no longer references these
+                # bytes (a healthy copy sits at a later position), so a
+                # stale read or scrub pass re-tripping over the carcass is
+                # not a new failure and must not resurrect the quarantine.
+                return
             first = pos not in self._quarantine
             self._quarantine[pos] = self._quarantine.get(pos, 0) + 1
-        self.metrics.add(crc_failures=1,
+        # crc_failures counts *distinct* corrupt positions: every scrub
+        # pass (and every read retry) re-detects the same bad bytes, and
+        # counting each observation would make one rotted record look like
+        # an ongoing corruption storm.  Observation counts stay per-position
+        # in the quarantine map.
+        self.metrics.add(crc_failures=1 if first else 0,
                          quarantined_positions=1 if first else 0)
 
     def quarantined(self) -> dict[int, int]:
         """Positions whose payload failed CRC, with observation counts."""
         with self._quarantine_lock:
             return dict(self._quarantine)
+
+    def mark_repaired(self, pos: int) -> bool:
+        """A healthy copy of the record at ``pos`` was re-appended (or the
+        position is otherwise dead to the index): remove it from quarantine
+        and remember it as repaired so later reads/scrub passes of the
+        stale bytes neither re-quarantine nor re-report it.  The repaired
+        set is pruned with the quarantine map once segment GC reclaims the
+        bytes.  Returns True when the position was quarantined."""
+        with self._quarantine_lock:
+            was = self._quarantine.pop(pos, None) is not None
+            self._repaired.add(pos)
+        if was:
+            self.metrics.add(repaired_positions=1)
+        return was
+
+    def repaired(self) -> frozenset:
+        """Positions cleared from quarantine by repair (bytes still on
+        disk until GC; scrub skips them)."""
+        with self._quarantine_lock:
+            return frozenset(self._repaired)
 
     def read_record(self, pos: int, verify: bool = True) -> tuple[int, bytes]:
         """Read + verify one record.  Failures raise the typed taxonomy
@@ -1085,11 +1117,14 @@ class Wal:
         if self._dropped_segments:
             self._dropped_segments = \
                 {s for s in self._dropped_segments if s >= first_seg}
-        # Quarantined positions whose bytes were reclaimed are moot.
+        # Quarantined/repaired positions whose bytes were reclaimed are moot.
         with self._quarantine_lock:
             if self._quarantine:
                 self._quarantine = {p: c for p, c in self._quarantine.items()
                                     if self.pos_live(p)}
+            if self._repaired:
+                self._repaired = {p for p in self._repaired
+                                  if self.pos_live(p)}
 
     def advance_gc_watermark(self, pos: int) -> None:
         """Files entirely below ``pos`` may be deleted (§4.4, file-granular GC)."""

@@ -115,7 +115,9 @@ class KvBatchServer:
     """
 
     def __init__(self, db, *, max_batch: int = 256, write_opts=None,
-                 prune_opts=None, admission=None, scrub: bool = False):
+                 prune_opts=None, admission=None, scrub: bool = False,
+                 auto_recover: bool = False,
+                 recover_interval_s: float = 0.5):
         self.db = db
         self.max_batch = max_batch
         # Overload control at the submission edge (see serving/admission):
@@ -179,6 +181,23 @@ class KvBatchServer:
         self.writes_shed_degraded = 0   # writes refused while engine degraded
         self.recover_attempts = 0       # try_recover calls routed to engine
         self.recoveries = 0             # ... that left the engine healthy
+        # Operator-less recovery: when auto_recover=True, an *idle* step()
+        # on a degraded engine probes db.try_recover(), rate-limited
+        # server-side to recover_interval_s, so a transient disk outage
+        # heals without anyone paging an operator.  Busy steps never probe
+        # (serving traffic always comes first), and healthy engines pay
+        # one attribute check per idle tick.
+        self.auto_recover = auto_recover
+        self.recover_interval_s = recover_interval_s
+        self._last_recover_probe = 0.0
+        self.auto_recover_probes = 0    # idle-tick probes attempted
+        self.auto_recoveries = 0        # ... that brought the engine back
+
+    def _engine_writable(self) -> bool:
+        w = getattr(self.db, "writable", None)
+        if w is None:   # engine predates the writable contract
+            return getattr(self.db, "health", "ok") != "degraded"
+        return bool(w)
 
     def _submit(self, req):
         if self._closed:
@@ -195,12 +214,15 @@ class KvBatchServer:
                 raise ValueError(
                     f"keyspace {SYSTEM_KEYSPACE!r} is read-only: its rows "
                     f"are maintained by the engine's StatsCollector")
-        if (isinstance(req, KvWrite)
-                and getattr(self.db, "health", "ok") == "degraded"):
-            # A degraded engine is read-only: shed the write at submit time
-            # through the same Overloaded channel as admission control, so
-            # clients with retry/backoff logic need no new error handling —
-            # and reads/exists keep flowing untouched.
+        if isinstance(req, KvWrite) and not self._engine_writable():
+            # An unwritable engine is read-only: shed the write at submit
+            # time through the same Overloaded channel as admission
+            # control, so clients with retry/backoff logic need no new
+            # error handling — and reads/exists keep flowing untouched.
+            # Note "unwritable", not "degraded": a replicated store with
+            # one degraded shard stays writable (the engine sheds the
+            # write to ring peers and resyncs the shard on rejoin), so
+            # its clients see zero write impact during the outage.
             self.writes_shed_degraded += 1
             reason = getattr(self.db, "degraded_reason", None) or "unknown"
             raise Overloaded(
@@ -247,6 +269,7 @@ class KvBatchServer:
         if not take:
             self._maybe_prune()          # idle steps still make progress
             self._maybe_scrub()          # ... and verify integrity in lulls
+            self._maybe_recover()        # ... and probe a degraded engine
             return 0
         # Conflict keys normalize the keyspace (engines accept an index or
         # a name for the same keyspace; both spellings must collide here).
@@ -317,6 +340,19 @@ class KvBatchServer:
         if checked:
             self.scrub_steps += 1
             self.scrub_checked += checked
+
+    def _maybe_recover(self) -> None:
+        if not self.auto_recover:
+            return
+        if getattr(self.db, "health", "ok") != "degraded":
+            return
+        now = time.monotonic()
+        if now - self._last_recover_probe < self.recover_interval_s:
+            return
+        self._last_recover_probe = now
+        self.auto_recover_probes += 1
+        if self.try_recover():
+            self.auto_recoveries += 1
 
     def _serve_reads(self, reqs: list) -> int:
         # One multi-call per (op, keyspace) group present in the run.
@@ -465,6 +501,8 @@ class KvBatchServer:
                 "writes_shed_degraded": self.writes_shed_degraded,
                 "recover_attempts": self.recover_attempts,
                 "recoveries": self.recoveries,
+                "auto_recover_probes": self.auto_recover_probes,
+                "auto_recoveries": self.auto_recoveries,
                 "health": getattr(self.db, "health", "ok"),
                 "queued": queued,
                 **(self.admission.stats() if self.admission is not None
